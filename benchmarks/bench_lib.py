@@ -1,0 +1,25 @@
+"""Shared helpers for the benchmark suite: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived = the
+figure's headline quantity, labeled in the name).
+"""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median-ish wall time per call in µs."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

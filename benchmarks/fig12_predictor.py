@@ -1,0 +1,37 @@
+"""Figure 12 — speed-predictor accuracy vs MLP architecture.
+
+(a) hidden size 64→1024 at 4 layers: similar accuracy/convergence.
+(b) layers 2→8 at hidden 64: 4 layers is the sweet spot.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.predictor import make_dataset, train_predictor
+from .bench_lib import emit, timeit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    feats, targets = make_dataset(rng, n=1500)
+    # (a) hidden sweep
+    for hidden in (64, 256, 1024):
+        import time
+        t0 = time.perf_counter()
+        _, hist = train_predictor(jax.random.PRNGKey(0), feats, targets,
+                                  hidden=hidden, layers=4, epochs=50)
+        emit(f"fig12a_hidden_{hidden}", (time.perf_counter() - t0) * 1e6,
+             f"val_mae={hist['val_mae'][-1]:.4f}")
+    # (b) layers sweep
+    maes = {}
+    for layers in (2, 4, 6, 8):
+        import time
+        t0 = time.perf_counter()
+        _, hist = train_predictor(jax.random.PRNGKey(0), feats, targets,
+                                  hidden=64, layers=layers, epochs=50)
+        maes[layers] = hist["val_mae"][-1]
+        emit(f"fig12b_layers_{layers}", (time.perf_counter() - t0) * 1e6,
+             f"val_mae={maes[layers]:.4f}")
+    best = min(maes, key=maes.get)
+    emit("fig12b_best_layers", 0.0, f"{best} (paper picks 4)")

@@ -1,0 +1,54 @@
+"""Kernel/step microbenchmarks on the CPU reference path (wall times are
+CPU-only context; the TPU story lives in the dry-run roofline, §EXPERIMENTS).
+Derived column reports achieved GFLOP/s for the compute steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_cache, init_params, make_decode_step, make_train_step
+from repro.models import layers as L
+from repro.optim.optimizer import AdamW, AdamWConfig
+from .bench_lib import emit, timeit
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    # chunked attention vs materialized (the jnp flash analogue)
+    B, S, H, Hk, d = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hk, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hk, d), jnp.float32)
+    flops = 4.0 * B * H * S * S * d          # qk + pv
+    att_m = jax.jit(lambda q, k, v: L.attention(q, k, v, causal=True))
+    att_c = jax.jit(lambda q, k, v: L.attention_chunked(q, k, v, causal=True,
+                                                        chunk_q=512, chunk_k=512))
+    for name, fn in (("attn_materialized_2k", att_m), ("attn_chunked_2k", att_c)):
+        us = timeit(lambda: jax.block_until_ready(fn(q, k, v)), iters=3)
+        emit(name, us, f"{flops/us/1e3:.1f}GFLOP/s")
+
+    # per-arch smoke step times (train + decode)
+    for arch in ("h2o-danube-1.8b", "deepseek-v2-lite-16b", "jamba-1.5-large-398b",
+                 "xlstm-350m"):
+        cfg = get_config(arch, smoke=True)
+        params = init_params(key, cfg)
+        opt = AdamW(AdamWConfig(total_steps=100))
+        ts = jax.jit(make_train_step(cfg, opt))
+        batch = {"tokens": jax.random.randint(key, (4, 64), 0, cfg.vocab_size)}
+        if cfg.frontend == "audio":
+            batch["src_embeds"] = jax.random.normal(key, (4, 64, cfg.d_model), cfg.dtype)
+        if cfg.frontend == "patch":
+            batch["patch_embeds"] = jax.random.normal(key, (4, cfg.num_patches, cfg.d_model), cfg.dtype)
+            batch["tokens"] = batch["tokens"][:, :64 - cfg.num_patches]
+        st = opt.init(params)
+        us = timeit(lambda: jax.block_until_ready(
+            ts(params, st, batch)[2]["loss"]), iters=3)
+        tokens = 4 * 64
+        emit(f"train_step_smoke_{arch}", us, f"{tokens/(us/1e6):.0f}tok/s")
+        dec = jax.jit(make_decode_step(cfg))
+        cache = init_cache(cfg, 4, 64, src_len=64 if cfg.enc_layers else 0)
+        us = timeit(lambda: jax.block_until_ready(
+            dec(params, cache, batch["tokens"][:, :1], 32)[0]), iters=5)
+        emit(f"decode_step_smoke_{arch}", us, f"{4/(us/1e6):.0f}tok/s")

@@ -1,0 +1,43 @@
+"""§7.4 system overhead — scheduler scalability: batched prediction + KM
+runtime vs problem size (paper: predictions < 1 ms each / several seconds
+batched; KM takes minutes for thousands of workloads and hides inside the
+scheduling interval).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.matching import km_match
+from .bench_lib import emit
+from .predictor_cache import get_predictor
+from repro.core.predictor import N_FEATURES
+
+
+def run() -> None:
+    pred = get_predictor()
+    # batched prediction throughput
+    for n in (1000, 10_000):
+        feats = np.random.default_rng(0).uniform(0, 1, (n, N_FEATURES)).astype(np.float32)
+        t0 = time.perf_counter()
+        pred.predict("T4", feats)
+        dt = time.perf_counter() - t0
+        emit(f"overhead_predict_batch_{n}", dt * 1e6,
+             f"{dt/n*1e6:.2f}us/pair (paper <1ms/pair)")
+    # KM scaling
+    rng = np.random.default_rng(0)
+    for n in (50, 200, 600):
+        w = rng.uniform(0, 1, (n, n))
+        t0 = time.perf_counter()
+        pairs = km_match(w)
+        dt = time.perf_counter() - t0
+        emit(f"overhead_km_n{n}", dt * 1e6,
+             f"{len(pairs)} pairs in {dt*1e3:.1f}ms")
+    # extrapolate O(n^3) to the paper's "thousands of workloads"
+    t0 = time.perf_counter()
+    km_match(rng.uniform(0, 1, (600, 600)))
+    t600 = time.perf_counter() - t0
+    t4000 = t600 * (4000 / 600) ** 3
+    emit("overhead_km_extrapolated_n4000", t4000 * 1e6,
+         f"{t4000/60:.1f}min (paper: several minutes; hidden in interval)")

@@ -1,0 +1,12 @@
+"""One trained speed predictor shared by all simulator benchmarks."""
+from __future__ import annotations
+
+_PRED = None
+
+
+def get_predictor():
+    global _PRED
+    if _PRED is None:
+        from repro.core.predictor import build_speed_predictor
+        _PRED = build_speed_predictor(gpu_types=("T4", "A10"), n=1500, epochs=60)
+    return _PRED

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper figure/table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (bench_lib.emit).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig11 fig4 # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig4", "benchmarks.fig4_sharing"),
+    ("fig10", "benchmarks.fig10_testbed"),
+    ("fig11", "benchmarks.fig11_comparison"),
+    ("fig12", "benchmarks.fig12_predictor"),
+    ("fig13", "benchmarks.fig13_ablation"),
+    ("fig14", "benchmarks.fig14_15_deployment"),
+    ("overhead", "benchmarks.overhead_matching"),
+    ("kernels", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = 0
+    for key, mod_name in SUITES:
+        if want and key not in want:
+            continue
+        t0 = time.time()
+        print(f"# === {mod_name} ===")
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        except Exception:  # noqa: BLE001 — report, continue
+            failures += 1
+            print(f"# FAILED {mod_name}")
+            traceback.print_exc()
+        print(f"# {mod_name} took {time.time()-t0:.1f}s")
+    print(f"# total {time.time()-t_all:.1f}s, failures={failures}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

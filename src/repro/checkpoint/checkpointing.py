@@ -1,0 +1,131 @@
+"""Sharded checkpointing: atomic, async-capable, eviction-safe.
+
+Layout: <dir>/step_<N>/ with one .npz per pytree leaf-group and a JSON
+manifest (tree structure, shapes, dtypes, step).  Writes go to a temp dir +
+atomic rename so a SIGTERM mid-write never corrupts the latest checkpoint —
+this is the persistence behind MuxFlow's graceful-exit and evict/restart
+paths ("we record checkpoints of offline workloads and restart ... after
+transmitting the models and checkpoints").
+
+Restore reshards automatically: arrays are loaded as numpy and placed with
+`jax.device_put(x, sharding)` against whatever mesh the restarted job has —
+the elastic-rescale path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        leaves, treedef = _flatten(tree)
+        manifest = {"step": step, "treedef": str(treedef),
+                    "n_leaves": len(leaves),
+                    "shapes": [list(np.shape(l)) for l in leaves],
+                    "dtypes": [str(np.asarray(l).dtype if not isinstance(l, jax.Array)
+                                   else l.dtype) for l in leaves]}
+        arrays = {}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            if arr.dtype == np.dtype("bfloat16"):
+                arrays[f"leaf_{i}"] = arr.view(np.uint16)
+                manifest["dtypes"][i] = "bfloat16"
+            else:
+                arrays[f"leaf_{i}"] = arr
+        np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                   # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and
+             os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like_tree, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of `like_tree`; optionally reshard."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    leaves, treedef = _flatten(like_tree)
+    assert len(leaves) == manifest["n_leaves"], "tree structure changed"
+    out = []
+    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                 if shardings is not None else [None] * len(leaves))
+    import ml_dtypes
+    for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = data[f"leaf_{i}"]
+        if manifest["dtypes"][i] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out), step
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing: the train loop hands off host copies
+    and keeps stepping (the paper hides scheduling/checkpoint overhead inside
+    the interval the same way)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_saved: int | None = None
+
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._do_save, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def _do_save(self, step, host_tree):
+        save(self.ckpt_dir, step, host_tree, keep=self.keep)
+        self.last_saved = step
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()

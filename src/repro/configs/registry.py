@@ -1,0 +1,47 @@
+"""Architecture registry: `get_config(arch_id, smoke=False)`.
+
+Each module in this package defines FULL (the exact assigned public config)
+and SMOKE (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "h2o-danube-1.8b",
+    "gemma-7b",
+    "h2o-danube-3-4b",
+    "mistral-nemo-12b",
+    "seamless-m4t-medium",
+    "deepseek-v2-lite-16b",
+    "granite-moe-1b-a400m",
+    "jamba-1.5-large-398b",
+    "xlstm-350m",
+    "pixtral-12b",
+]
+
+_MODULES = {
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "gemma-7b": "gemma_7b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "xlstm-350m": "xlstm_350m",
+    "pixtral-12b": "pixtral_12b",
+}
+
+
+def get_config(arch_id: str, smoke: bool = False, **overrides):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg = mod.SMOKE if smoke else mod.FULL
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke=smoke) for a in ARCH_IDS}

@@ -1,0 +1,24 @@
+"""Dynamic SM allocation (§4.3, Fig. 8): the offline workload's SM share is
+set complementary to the online workload's measured SM activity instead of a
+fixed split — workload A at 20 % SM leaves 80 % for its offline partner,
+workload B at 80 % leaves 20 %.
+"""
+from __future__ import annotations
+
+
+def dynamic_sm(online_sm_activity: float, *, headroom: float = 0.05,
+               floor: float = 0.1, cap: float = 0.9,
+               step: float = 0.1) -> float:
+    """Complementary share: 1 − a_on − headroom, clipped to [floor, cap] and
+    quantized to MPS-style `step` increments
+    (CUDA_MPS_ACTIVE_THREAD_PERCENTAGE granularity)."""
+    share = 1.0 - float(online_sm_activity) - headroom
+    share = max(floor, min(cap, share))
+    if step > 0:
+        share = round(share / step) * step
+    return max(floor, min(cap, share))
+
+
+def fixed_sm(share: float = 0.4) -> float:
+    """The MuxFlow-S ablation baseline: a fixed offline SM share."""
+    return share

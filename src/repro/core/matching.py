@@ -1,0 +1,103 @@
+"""Maximum-weight bipartite matching via the Kuhn–Munkres (Hungarian)
+algorithm — the paper's scheduler core (§5), O(|V|³).
+
+`km_match(weights)` maximizes total weight over a (possibly rectangular)
+weight matrix; unmatched rows/cols are allowed (padding with zero weight —
+an offline workload may stay pending, a GPU may stay unshared, exactly the
+paper's semantics where every edge weight = predicted normalized throughput
+≥ 0).
+
+Implementation: Jonker–Volgenant shortest-augmenting-path with potentials
+(numpy-vectorized inner loop), the standard exact O(n³) form of KM.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+def _jv_min_assign(cost: np.ndarray) -> np.ndarray:
+    """Minimum-cost perfect assignment on a square matrix.
+    Returns col_of_row (n,).  O(n^3)."""
+    n = cost.shape[0]
+    INF = np.inf
+    u = np.zeros(n + 1)
+    v = np.zeros(n + 1)
+    p = np.zeros(n + 1, dtype=np.int64)          # p[j] = row matched to col j
+    way = np.zeros(n + 1, dtype=np.int64)
+    # 1-indexed internally; column 0 is virtual
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = np.full(n + 1, INF)
+        used = np.zeros(n + 1, dtype=bool)
+        while True:
+            used[j0] = True
+            i0 = p[j0]
+            # vectorized relaxation over unused columns 1..n
+            free = ~used[1:]
+            cur = cost[i0 - 1, :] - u[i0] - v[1:]
+            better = free & (cur < minv[1:])
+            minv[1:] = np.where(better, cur, minv[1:])
+            way[1:][better] = j0
+            # find delta over free columns
+            masked = np.where(free, minv[1:], INF)
+            j1 = int(np.argmin(masked)) + 1
+            delta = masked[j1 - 1]
+            # update potentials
+            u[p[used]] += delta
+            v[used] -= delta
+            minv[1:][free] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        # augment along the path
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    col_of_row = np.zeros(n, dtype=np.int64)
+    for j in range(1, n + 1):
+        if p[j] > 0:
+            col_of_row[p[j] - 1] = j - 1
+    return col_of_row
+
+
+def km_match(weights: np.ndarray) -> list[tuple[int, int]]:
+    """Maximum-weight matching.  weights: (n_online, n_offline), >= 0.
+    Returns [(row, col), ...] for matched pairs with weight > 0."""
+    w = np.asarray(weights, dtype=np.float64)
+    if w.size == 0:
+        return []
+    n_r, n_c = w.shape
+    n = max(n_r, n_c)
+    pad = np.zeros((n, n))
+    pad[:n_r, :n_c] = w
+    cost = w.max() - pad if w.size else pad      # maximize -> minimize
+    col_of_row = _jv_min_assign(cost)
+    out = []
+    for r in range(n_r):
+        c = int(col_of_row[r])
+        if c < n_c and pad[r, c] > 0:
+            out.append((r, c))
+    return out
+
+
+def matching_weight(weights: np.ndarray, pairs: list[tuple[int, int]]) -> float:
+    return float(sum(weights[r, c] for r, c in pairs))
+
+
+def brute_force_match(weights: np.ndarray) -> float:
+    """Exponential oracle for tests (n <= ~8): best total weight over all
+    injective partial assignments."""
+    w = np.asarray(weights, dtype=np.float64)
+    n_r, n_c = w.shape
+    best = 0.0
+    cols = list(range(n_c))
+    k = min(n_r, n_c)
+    for rows in itertools.combinations(range(n_r), k):
+        for perm in itertools.permutations(cols, k):
+            s = sum(max(w[r, c], 0.0) for r, c in zip(rows, perm))
+            best = max(best, s)
+    return best

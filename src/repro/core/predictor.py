@@ -1,0 +1,149 @@
+"""The DL speed predictor (§5): a 4-layer MLP with 64×64 hidden sizes that
+maps (online profile, offline profile, assigned SM %) → predicted normalized
+offline throughput.  Trained with momentum SGD (the paper's optimizer), one
+model per GPU type, ~2 000 samples per type.
+
+Pure JAX; the MLP is also used in the accuracy-sweep benchmark (Fig. 12).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interference import (OFFLINE_MODEL_PROFILES, WorkloadProfile,
+                                     online_profile, shared_performance)
+from repro.optim.optimizer import MomentumSGD, MomentumSGDConfig
+
+N_FEATURES = 9  # on: util, sm_act, occ, time | off: util, sm_act, occ, time | sm%
+
+
+def pair_features(online: WorkloadProfile, offline: WorkloadProfile,
+                  sm_off: float) -> np.ndarray:
+    return np.array([
+        online.gpu_util, online.sm_activity, online.sm_occupancy,
+        online.exec_time_ms / 1000.0,
+        offline.gpu_util, offline.sm_activity, offline.sm_occupancy,
+        offline.exec_time_ms / 1000.0,
+        sm_off,
+    ], dtype=np.float32)
+
+
+def mlp_init(key, hidden: int = 64, layers: int = 4, in_dim: int = N_FEATURES):
+    """`layers` total linear layers (the paper picks 4, hidden 64×64)."""
+    dims = [in_dim] + [hidden] * (layers - 1) + [1]
+    ks = jax.random.split(key, len(dims) - 1)
+    params = []
+    for k, din, dout in zip(ks, dims[:-1], dims[1:]):
+        w = jax.random.normal(k, (din, dout), jnp.float32) * (2.0 / din) ** 0.5
+        params.append({"w": w, "b": jnp.zeros((dout,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params, x):
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return jax.nn.sigmoid(h[..., 0])   # normalized throughput in (0,1)
+
+
+@dataclasses.dataclass
+class SpeedPredictor:
+    """One trained MLP per GPU type (the paper trains per-type models)."""
+    params_by_type: dict
+
+    def predict(self, gpu_type: str, feats: np.ndarray) -> np.ndarray:
+        """feats: (..., N_FEATURES) -> (...,) normalized throughput."""
+        params = self.params_by_type[gpu_type]
+        return np.asarray(mlp_apply(params, jnp.asarray(feats)))
+
+    def predict_pair(self, gpu_type: str, online, offline, sm_off) -> float:
+        return float(self.predict(gpu_type, pair_features(online, offline, sm_off)))
+
+
+def make_dataset(rng: np.random.Generator, n: int = 2000,
+                 noise: float = 0.02) -> tuple[np.ndarray, np.ndarray]:
+    """Synthesize a profiling dataset from the interference model: random
+    (online service @ random QPS, offline model, sm%) triples with measured
+    (= modeled + measurement noise) shared throughput."""
+    feats, targets = [], []
+    services = list(("recommend", "translate", "vision"))
+    offline_names = list(OFFLINE_MODEL_PROFILES)
+    for _ in range(n):
+        svc = services[rng.integers(len(services))]
+        qps = float(rng.uniform(5.0, 190.0))
+        on = online_profile(svc, qps)
+        off = OFFLINE_MODEL_PROFILES[offline_names[rng.integers(len(offline_names))]]
+        # jitter the offline profile so the dataset covers a family, not 4 points
+        off = dataclasses.replace(
+            off,
+            sm_activity=float(np.clip(off.sm_activity * rng.uniform(0.8, 1.2), 0.05, 1.0)),
+            mem_bw=float(np.clip(off.mem_bw * rng.uniform(0.8, 1.2), 0.05, 1.0)),
+            exec_time_ms=off.exec_time_ms * float(rng.uniform(0.7, 1.4)))
+        sm = float(rng.uniform(0.05, 1.0))
+        _, tput = shared_performance(on, off, sm)
+        feats.append(pair_features(on, off, sm))
+        targets.append(tput + rng.normal(0.0, noise))
+    return np.stack(feats), np.clip(np.array(targets, np.float32), 0.0, 1.0)
+
+
+def train_predictor(key, feats: np.ndarray, targets: np.ndarray, *,
+                    hidden: int = 64, layers: int = 4, epochs: int = 200,
+                    batch_size: int = 128, lr: float = 0.05,
+                    val_frac: float = 0.2, seed: int = 0):
+    """Momentum-SGD training.  Returns (params, history dict)."""
+    n = len(feats)
+    n_val = int(n * val_frac)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    feats, targets = feats[perm], targets[perm]
+    xv, yv = jnp.asarray(feats[:n_val]), jnp.asarray(targets[:n_val])
+    xt, yt = jnp.asarray(feats[n_val:]), jnp.asarray(targets[n_val:])
+    params = mlp_init(key, hidden=hidden, layers=layers)
+    opt = MomentumSGD(MomentumSGDConfig(lr=lr, momentum=0.9))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(p):
+            pred = mlp_apply(p, xb)
+            return jnp.mean((pred - yb) ** 2)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = opt.update(params, grads, state)
+        return params, state, loss
+
+    @jax.jit
+    def mae(params, x, y):
+        return jnp.mean(jnp.abs(mlp_apply(params, x) - y))
+
+    n_train = len(xt)
+    steps_per_epoch = max(1, n_train // batch_size)
+    history = {"val_mae": [], "train_loss": []}
+    for ep in range(epochs):
+        order = rng.permutation(n_train)
+        ep_loss = 0.0
+        for s in range(steps_per_epoch):
+            idx = order[s * batch_size:(s + 1) * batch_size]
+            params, state, loss = step(params, state, xt[idx], yt[idx])
+            ep_loss += float(loss)
+        history["train_loss"].append(ep_loss / steps_per_epoch)
+        history["val_mae"].append(float(mae(params, xv, yv)))
+    return params, history
+
+
+def build_speed_predictor(gpu_types=("T4", "A10"), n: int = 2000,
+                          epochs: int = 120, seed: int = 0) -> SpeedPredictor:
+    """Train one MLP per GPU type (A10 modeled as a 1.35× faster T4 with
+    different contention noise seed)."""
+    params_by_type = {}
+    for i, t in enumerate(gpu_types):
+        rng = np.random.default_rng(seed + i)
+        feats, targets = make_dataset(rng, n=n)
+        params, _ = train_predictor(jax.random.PRNGKey(seed + i), feats, targets,
+                                    epochs=epochs, seed=seed + i)
+        params_by_type[t] = params
+    return SpeedPredictor(params_by_type)

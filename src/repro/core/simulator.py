@@ -1,0 +1,378 @@
+"""Trace-driven cluster simulator (§7.1: "Inspired by [Tiresias, Muri], we
+build a simulator to evaluate a broader set of configurations, traces, and
+baselines").
+
+Fixed-tick discrete-event simulation of a GPU cluster where every device
+hosts one online workload (diurnal QPS) and at most one offline workload.
+Implements the full MuxFlow stack — dynamic SM allocation, the speed
+predictor + KM matching scheduler, SysMonitor protection/eviction, the mixed
+error handler, checkpoint/restart fault tolerance — and the paper's
+baselines: Online-only, Time-sharing (Gandiva-style), and Priority-based
+time-sharing (AntMan/PAI-style), plus the MuxFlow-S/-M/-S-M ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.errors import ERROR_MIX, ErrorKind, MixedErrorHandler, sample_error
+from repro.core.interference import (OFFLINE_MODEL_PROFILES, memory_feasible,
+                                     online_profile, shared_performance)
+from repro.core.predictor import SpeedPredictor
+from repro.core.protection import DeviceTelemetry
+from repro.core.scheduler import (Assignment, OfflineJob, OnlineSlot,
+                                  SchedulerConfig, schedule)
+from repro.core.sysmonitor import GPUState, SysMonitor
+from repro.core.traces import SERVICES, OfflineJobSpec, OnlineQPS, make_trace
+
+POLICIES = ("muxflow", "muxflow-s", "muxflow-m", "muxflow-s-m",
+            "online-only", "time-sharing", "pb-time-sharing")
+
+
+@dataclasses.dataclass
+class SimConfig:
+    policy: str = "muxflow"
+    n_devices: int = 200
+    horizon_s: float = 12 * 3600.0
+    tick_s: float = 30.0
+    schedule_interval_s: float = 900.0        # 15 min (paper's testbed)
+    checkpoint_interval_s: float = 300.0
+    restart_delay_s: float = 90.0             # image pull + restore
+    trace: str = "A"
+    seed: int = 0
+    gpu_types: tuple = ("T4", "T4", "T4", "A10")   # heterogeneous mix
+    error_rate_per_job_hour: float = 0.05      # offline container errors
+    graceful_exit: bool = True                 # MuxFlow's §4.2 mechanism
+    device_mtbf_h: float = 4000.0              # hardware failures
+    device_repair_s: float = 1800.0
+    online_outage_s: float = 120.0             # when an error propagates
+    memory_quota: float = 0.4
+
+
+@dataclasses.dataclass
+class _Device:
+    idx: int
+    gpu_type: str
+    service: str
+    qps: OnlineQPS
+    monitor: SysMonitor
+    job: "_RunningJob | None" = None
+    failed_until: float = -1.0
+    online_outage_until: float = -1.0
+    base_latency_ms: float = 50.0
+    speed: float = 1.0                         # A10 runs offline 1.35x faster
+
+
+@dataclasses.dataclass
+class _RunningJob:
+    spec: OfflineJobSpec
+    progress_s: float                          # in separate-execution seconds
+    checkpoint_s: float                        # last checkpointed progress
+    sm_share: float
+    started_at: float
+    shared_wall_s: float = 0.0                 # wall seconds on a device
+
+
+@dataclasses.dataclass
+class SimResults:
+    policy: str
+    trace: str
+    # online
+    avg_latency_ms: float = 0.0
+    p99_latency_ms: float = 0.0
+    base_avg_latency_ms: float = 0.0
+    avg_slowdown: float = 1.0
+    # offline
+    n_jobs: int = 0
+    n_finished: int = 0
+    avg_jct_s: float = 0.0
+    makespan_s: float = 0.0
+    oversold_gpu: float = 0.0                  # Eq. 3
+    avg_norm_tput: float = 0.0
+    evictions: int = 0
+    eviction_frac: float = 0.0
+    # utilization (cluster averages)
+    gpu_util: float = 0.0
+    sm_activity: float = 0.0
+    mem_used: float = 0.0
+    # safety
+    errors_injected: int = 0
+    errors_propagated: int = 0
+    online_incidents: int = 0
+    # timeline (downsampled) for figure benchmarks
+    timeline: dict = dataclasses.field(default_factory=dict)
+
+
+class ClusterSim:
+    def __init__(self, cfg: SimConfig, predictor: SpeedPredictor | None = None):
+        assert cfg.policy in POLICIES, cfg.policy
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.predictor = predictor
+        if cfg.policy.startswith("muxflow") and predictor is None:
+            raise ValueError("MuxFlow policies need a speed predictor")
+        self.devices = [
+            _Device(
+                idx=i,
+                gpu_type=cfg.gpu_types[i % len(cfg.gpu_types)],
+                service=SERVICES[i % len(SERVICES)],
+                qps=OnlineQPS(self.rng),
+                monitor=SysMonitor(now=0.0),
+                base_latency_ms={"recommend": 38.0, "translate": 55.0,
+                                 "vision": 70.0}[SERVICES[i % len(SERVICES)]],
+                speed=1.35 if cfg.gpu_types[i % len(cfg.gpu_types)] == "A10" else 1.0,
+            )
+            for i in range(cfg.n_devices)
+        ]
+        self.jobs = make_trace(cfg.trace, cfg.n_devices, cfg.horizon_s, cfg.seed)
+        self.pending: list[OfflineJobSpec] = []
+        self.err_handler = MixedErrorHandler(graceful_enabled=cfg.graceful_exit)
+        self.finished: list[tuple[OfflineJobSpec, float]] = []   # (spec, jct)
+        self.evictions = 0
+        self.executions = 0
+        self.errors_injected = 0
+        self.online_incidents = 0
+        # accumulators
+        self._lat_sum = self._lat_wsum = 0.0
+        self._lat_samples: list[float] = []
+        self._base_lat_sum = 0.0
+        self._util_acc = np.zeros(3)          # gpu_util, sm_act, mem
+        self._util_ticks = 0
+        self._tput_sum = self._tput_ticks = 0.0
+        self._timeline: dict[str, list] = {"t": [], "gpu_util": [], "sm_act": [],
+                                           "mem": [], "slowdown": [], "tput": []}
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResults:
+        cfg = self.cfg
+        t = 0.0
+        job_i = 0
+        next_sched = 0.0
+        n_ticks = int(cfg.horizon_s / cfg.tick_s)
+        for _ in range(n_ticks):
+            # job arrivals
+            while job_i < len(self.jobs) and self.jobs[job_i].submit_s <= t:
+                self.pending.append(self.jobs[job_i])
+                job_i += 1
+            # scheduling interval
+            if cfg.policy != "online-only" and t >= next_sched:
+                self._schedule(t)
+                next_sched = t + cfg.schedule_interval_s
+            self._tick(t)
+            t += cfg.tick_s
+        return self._results(t)
+
+    # ------------------------------------------------------------- schedule
+    def _schedule(self, t: float) -> None:
+        cfg = self.cfg
+        if cfg.policy in ("time-sharing", "pb-time-sharing"):
+            # greedy FIFO packing: any alive device without a job
+            for d in self.devices:
+                if not self.pending:
+                    break
+                if d.job is None and d.failed_until <= t:
+                    spec = self.pending.pop(0)
+                    self._start_job(d, spec, 0.5, t)
+            return
+        sched_cfg = SchedulerConfig(
+            use_dynamic_sm=cfg.policy in ("muxflow", "muxflow-m"),
+            use_matching=cfg.policy in ("muxflow", "muxflow-s"))
+        # free healthy devices (the paper only schedules onto Healthy GPUs)
+        slots, free_devs = [], []
+        for d in self.devices:
+            if d.job is None and d.failed_until <= t and d.monitor.schedulable:
+                on = online_profile(d.service, d.qps.qps(t))
+                slots.append(OnlineSlot(d.idx, d.gpu_type, on))
+                free_devs.append(d)
+        jobs = [OfflineJob(s.job_id, OFFLINE_MODEL_PROFILES[s.model],
+                           s.duration_s) for s in self.pending]
+        quota_ok = {
+            (sl.device_id, jb.job_id)
+            for sl in slots for jb in jobs
+            if memory_feasible(sl.profile, jb.profile, cfg.memory_quota)}
+        assignments = schedule(slots, jobs, self.predictor, sched_cfg)
+        by_job = {s.job_id: s for s in self.pending}
+        dev_by_id = {d.idx: d for d in self.devices}
+        for a in assignments:
+            if (a.device_id, a.job_id) not in quota_ok:
+                continue  # xCUDA memory quota rejects the pairing
+            spec = by_job.pop(a.job_id, None)
+            if spec is None:
+                continue
+            self.pending.remove(spec)
+            self._start_job(dev_by_id[a.device_id], spec, a.sm_share, t)
+
+    def _start_job(self, d: _Device, spec: OfflineJobSpec, share: float,
+                   t: float) -> None:
+        d.job = _RunningJob(spec=spec, progress_s=0.0, checkpoint_s=0.0,
+                            sm_share=share, started_at=t)
+        self.executions += 1
+
+    # ----------------------------------------------------------------- tick
+    def _tick(self, t: float) -> None:
+        cfg = self.cfg
+        dt = cfg.tick_s
+        lat_num = lat_den = 0.0
+        base_num = 0.0
+        util = np.zeros(3)
+        tput_sum, tput_n = 0.0, 0
+        slow_sum, slow_n = 0.0, 0
+        for d in self.devices:
+            # hardware failure / recovery
+            if d.failed_until > t:
+                continue
+            if self.rng.random() < dt / (cfg.device_mtbf_h * 3600.0):
+                d.failed_until = t + cfg.device_repair_s
+                self._evict(d, t, requeue=True, count=False)
+                continue
+            qps = d.qps.qps(t)
+            on = online_profile(d.service, qps)
+            slowdown, tput = 1.0, 0.0
+            if d.job is not None:
+                off = OFFLINE_MODEL_PROFILES[d.job.spec.model]
+                slowdown, tput = self._policy_perf(d, on, off)
+                tput *= d.speed
+                # offline progress + periodic checkpoint
+                d.job.progress_s += tput * dt
+                d.job.shared_wall_s += dt
+                if (d.job.progress_s - d.job.checkpoint_s
+                        >= cfg.checkpoint_interval_s):
+                    d.job.checkpoint_s = d.job.progress_s
+                tput_sum += tput
+                tput_n += 1
+                # error injection (offline container errors)
+                p_err = cfg.error_rate_per_job_hour * dt / 3600.0
+                if self.rng.random() < p_err:
+                    self._inject_error(d, t)
+                if d.job is not None and d.job.progress_s >= d.job.spec.duration_s:
+                    self.finished.append((d.job.spec, t - d.job.spec.submit_s,
+                                          d.job.shared_wall_s, d.job.progress_s))
+                    d.job = None
+            # telemetry + SysMonitor
+            used_off = (min(d.job.sm_share,
+                            OFFLINE_MODEL_PROFILES[d.job.spec.model].sm_activity)
+                        if d.job else 0.0)
+            tele = DeviceTelemetry(
+                ts=t,
+                gpu_util=min(1.0, on.gpu_util + (0.62 * used_off if d.job else 0.0)),
+                sm_activity=min(1.0, on.sm_activity + used_off * 0.45),
+                sm_clock=1590.0 - 420.0 * max(0.0, on.sm_activity + used_off - 0.8),
+                mem_used_frac=min(1.0, on.mem_bytes_frac
+                                  + (OFFLINE_MODEL_PROFILES[d.job.spec.model].mem_bytes_frac
+                                     if d.job else 0.0)),
+            )
+            state, events = d.monitor.update(tele, t)
+            if "evict" in events and d.job is not None:
+                self._evict(d, t, requeue=True)
+            # online latency accounting (weighted by qps)
+            outage = d.online_outage_until > t
+            lat = d.base_latency_ms * slowdown * (10.0 if outage else 1.0)
+            if outage:
+                self.online_incidents += 0  # counted at injection
+            lat_num += lat * qps
+            base_num += d.base_latency_ms * qps
+            lat_den += qps
+            self._lat_samples.append(lat)
+            slow_sum += slowdown
+            slow_n += 1
+            util += np.array([tele.gpu_util, tele.sm_activity, tele.mem_used_frac])
+        self._lat_sum += lat_num
+        self._base_lat_sum += base_num
+        self._lat_wsum += lat_den
+        self._util_acc += util
+        self._util_ticks += 1
+        if tput_n:
+            self._tput_sum += tput_sum / tput_n
+            self._tput_ticks += 1
+        if int(t) % 600 == 0:
+            n = max(len(self.devices), 1)
+            self._timeline["t"].append(t)
+            self._timeline["gpu_util"].append(util[0] / n)
+            self._timeline["sm_act"].append(util[1] / n)
+            self._timeline["mem"].append(util[2] / n)
+            self._timeline["slowdown"].append(slow_sum / max(slow_n, 1))
+            self._timeline["tput"].append(tput_sum / max(tput_n, 1) if tput_n else 0.0)
+
+    def _policy_perf(self, d: _Device, on, off) -> tuple[float, float]:
+        """(online slowdown, offline normalized tput) per policy."""
+        pol = self.cfg.policy
+        if pol.startswith("muxflow"):
+            return shared_performance(on, off, d.job.sm_share)
+        if pol == "time-sharing":
+            # fair time slices (Gandiva-style): offline takes ~half the time
+            off_duty = 0.5
+            slowdown = 1.0 + 0.9 * off_duty * min(1.0, on.gpu_util * 2.2)
+            return slowdown, off_duty * 0.9
+        if pol == "pb-time-sharing":
+            # online priority: offline fills idle *time* only (AntMan/PAI)
+            idle = max(0.0, 1.0 - on.gpu_util)
+            return 1.05, idle * 0.8
+        return 1.0, 0.0
+
+    def _inject_error(self, d: _Device, t: float) -> None:
+        self.errors_injected += 1
+        kind = sample_error(self.rng)
+        handled = self.err_handler.handle(kind)
+        if handled.propagated:
+            d.online_outage_until = t + self.cfg.online_outage_s
+            self.online_incidents += 1
+        if handled.action.value == "graceful_exit":
+            # graceful exit checkpoints before releasing
+            if d.job is not None:
+                d.job.checkpoint_s = d.job.progress_s
+        self._evict(d, t, requeue=True, count=False)
+
+    def _evict(self, d: _Device, t: float, requeue: bool, count: bool = True) -> None:
+        if d.job is None:
+            return
+        if count:
+            self.evictions += 1
+        job = d.job
+        d.job = None
+        if requeue and job.progress_s < job.spec.duration_s:
+            # resume from last checkpoint
+            spec = dataclasses.replace(
+                job.spec, duration_s=job.spec.duration_s - job.checkpoint_s,
+                submit_s=job.spec.submit_s)
+            spec.job_id = job.spec.job_id
+            self.pending.insert(0, spec)
+
+    # -------------------------------------------------------------- results
+    def _results(self, t_end: float) -> SimResults:
+        r = SimResults(policy=self.cfg.policy, trace=self.cfg.trace)
+        r.n_jobs = len(self.jobs)
+        r.n_finished = len(self.finished)
+        if self.finished:
+            r.avg_jct_s = float(np.mean([jct for _, jct, _, _ in self.finished]))
+            r.makespan_s = float(max(jct + s.submit_s
+                                     for s, jct, _, _ in self.finished))
+        r.avg_latency_ms = self._lat_sum / max(self._lat_wsum, 1e-9)
+        r.base_avg_latency_ms = self._base_lat_sum / max(self._lat_wsum, 1e-9)
+        r.avg_slowdown = r.avg_latency_ms / max(r.base_avg_latency_ms, 1e-9)
+        if self._lat_samples:
+            r.p99_latency_ms = float(np.percentile(self._lat_samples, 99))
+        util = self._util_acc / max(self._util_ticks * len(self.devices), 1)
+        r.gpu_util, r.sm_activity, r.mem_used = map(float, util)
+        r.avg_norm_tput = self._tput_sum / max(self._tput_ticks, 1e-9)
+        # Eq. 3: oversold GPU — effective separate-execution seconds delivered
+        # per wall-second the offline workloads spent sharing a device
+        prog = sum(d.job.progress_s for d in self.devices if d.job)
+        wall = sum(d.job.shared_wall_s for d in self.devices if d.job)
+        prog += sum(p for _, _, _, p in self.finished)
+        wall += sum(w for _, _, w, _ in self.finished)
+        r.oversold_gpu = float(min(1.0, prog / max(wall, 1e-9)))
+        r.evictions = self.evictions
+        r.eviction_frac = self.evictions / max(self.executions, 1)
+        r.errors_injected = self.errors_injected
+        r.errors_propagated = sum(1 for h in self.err_handler.handled if h.propagated)
+        r.online_incidents = self.online_incidents
+        r.timeline = self._timeline
+        return r
+
+
+def run_policy(policy: str, predictor: SpeedPredictor | None = None,
+               **overrides) -> SimResults:
+    cfg = SimConfig(policy=policy, **overrides)
+    return ClusterSim(cfg, predictor).run()

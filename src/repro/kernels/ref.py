@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal=True, window=None,
+                        kv_len=None) -> jax.Array:
+    """q: (B,Sq,H,d); k,v: (B,Skv,Hk,d).  fp32 softmax, GQA by repeat."""
+    B, Sq, H, d = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_reference(q, k_cache, v_cache, kv_len) -> jax.Array:
+    """q: (B,1,H,d) against (B,Skv,Hk,d) caches with kv_len valid entries."""
+    B, _, H, d = q.shape
+    Skv = k_cache.shape[1]
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+    outs = attention_reference(
+        q, k_cache, v_cache, causal=False,
+        kv_len=None)  # full; mask below per batch
+    # redo with per-batch masks (reference simplicity over speed)
+    Hk = k_cache.shape[2]
+    G = H // Hk
+    k = jnp.repeat(k_cache, G, axis=2) if G > 1 else k_cache
+    v = jnp.repeat(v_cache, G, axis=2) if G > 1 else v_cache
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(Skv)[None, :] < kv_len[:, None]      # (B, Skv)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_reference(dt, x, B_ssm, C_ssm, A_log) -> jax.Array:
+    """Sequential selective scan.  Shapes as ssm_scan; returns fp32 y."""
+    Bsz, S, di = x.shape
+    N = B_ssm.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    bx = (dtf * x.astype(jnp.float32))
+
+    def step(h, inp):
+        dt_t, bx_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)               # (B, di, N)
+        h = dA * h + bx_t[..., None] * B_t[:, None, :]
+        return h, (h * C_t[:, None, :]).sum(-1)
+
+    h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (dtf.swapaxes(0, 1), bx.swapaxes(0, 1),
+                                    B_ssm.astype(jnp.float32).swapaxes(0, 1),
+                                    C_ssm.astype(jnp.float32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,366 @@
+"""Post-SPMD HLO analysis: FLOPs, bytes, and collective traffic with correct
+while-loop (lax.scan) trip-count accounting.
+
+XLA's `compiled.cost_analysis()` visits a while body ONCE, so a model scanned
+over layers under-reports by the repeat factor (verified empirically).  This
+module parses `compiled.as_text()`:
+
+  * builds the computation graph and a per-computation execution multiplier
+    (entry=1; a while body/condition inherits parent multiplier × trip count,
+    where the trip count is recovered from the loop-condition constant),
+  * FLOPs: exact for dot/convolution (2 · prod(out) · contraction), the
+    dominant terms; elementwise ops are counted at 1 flop/output element
+    from fusion outputs (secondary),
+  * bytes: fusion-boundary accounting (operands + outputs of top-level ops,
+    skipping free ops: tuple/gte/bitcast/parameter/constant),
+  * collectives: per-device link bytes with ring-model factors
+      all-reduce 2(n−1)/n · B, all-gather (n−1)/n · B_result,
+      reduce-scatter (n−1) · B_result, all-to-all (n−1)/n · B,
+      collective-permute 1 · B,
+    n = replica-group size parsed per op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "iota", "broadcast",
+            "reshape", "custom-call", "while", "conditional", "call",
+            "opt-barrier"}
+
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start", "ragged-all-to-all"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str           # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict        # instr name -> type_str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, op, rest = m.groups()
+            cur.instrs.append(Instr(name, type_str, op, rest))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _entry_name(comps, text):
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    # fallback: computation that is not referenced by any other
+    referenced = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for ref in re.findall(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)", ins.rest):
+                referenced.add(ref)
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover a scan trip count from the loop condition's compare constant."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    """Execution count per computation (entry=1; while bodies × trip count)."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS through call edges
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                if body and cond and cond.group(1) in comps:
+                    trips = _trip_count(comps[cond.group(1)])
+                    for target, k in ((body.group(1), trips), (cond.group(1), trips + 1)):
+                        mult[target] += m * k
+                        if target not in seen:
+                            seen.add(target)
+                            order.append(target)
+            elif ins.op == "conditional":
+                for target in re.findall(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-,% ]+)", ins.rest):
+                    for t in re.split(r"[,\s%]+", target):
+                        if t in comps:
+                            mult[t] += m
+                            if t not in seen:
+                                seen.add(t)
+                                order.append(t)
+            else:
+                for attr in ("calls", "to_apply"):
+                    mm = re.search(rf"{attr}=%?([\w.\-]+)", ins.rest)
+                    if mm and mm.group(1) in comps:
+                        mult[mm.group(1)] += m
+                        if mm.group(1) not in seen:
+                            seen.add(mm.group(1))
+                            order.append(mm.group(1))
+    return dict(mult)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 · prod(output dims) · prod(contracting dims of lhs)."""
+    out_elems = shape_elems(ins.type_str)
+    m = re.match(r"\s*%?([\w.\-]+)", ins.rest)
+    if not m:
+        return 0.0
+    lhs_type = comp.shapes.get(m.group(1))
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if lhs_type is None or cd is None:
+        return 2.0 * out_elems  # conservative
+    dims_m = _SHAPE_RE.search(lhs_type)
+    if not dims_m:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",")] if dims_m.group(2) else []
+    k = 1
+    for idx in cd.group(1).split(","):
+        if idx != "" and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+_RING = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-reduce-start": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "all-gather-start": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "ragged-all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+    "collective-permute-start": lambda n: 1.0,
+}
+
+
+def _dus_fusion_slice_bytes(ins: Instr, comps: dict) -> float | None:
+    """If `ins` is a fusion performing an in-place dynamic-update-slice of a
+    same-shaped accumulator (the scan-carried stack pattern), return the
+    updated-slice bytes; else None.  Matches any DUS inside the fusion whose
+    result extents equal the fusion output's extents (dtype ignored: XLA
+    sometimes interleaves converts)."""
+    m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+    if not m or m.group(1) not in comps:
+        return None
+    comp = comps[m.group(1)]
+    out_dims = _SHAPE_RE.search(ins.type_str)
+    out_sig = out_dims.group(2) if out_dims else None
+    if out_sig is None:
+        return None
+    for inner in comp.instrs:
+        if inner.op != "dynamic-update-slice":
+            continue
+        dims = _SHAPE_RE.search(inner.type_str)
+        if dims and dims.group(2) == out_sig:
+            mm = re.match(r"\s*%?([\w.\-]+),\s*%?([\w.\-]+)", inner.rest)
+            if mm and mm.group(2) in comp.shapes:
+                return 2.0 * shape_bytes(comp.shapes[mm.group(2)])
+    return None
+
+
+def _fusion_operand_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    """Operand traffic of a fusion, charging dynamic-slice-only params at the
+    slice size (in-place stack reads)."""
+    m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+    refs = [r for r in re.findall(r"%?([\w.\-]+)", ins.rest.split(")")[0])
+            if r in comp.shapes]
+    if not m or m.group(1) not in comps:
+        return float(sum(shape_bytes(comp.shapes[r]) for r in refs))
+    called = comps[m.group(1)]
+    # map parameter index -> (uses_total, dynamic-slice output bytes)
+    param_names = {}
+    for inner in called.instrs:
+        if inner.op == "parameter":
+            pm = re.match(r"(\d+)", inner.rest)
+            if pm:
+                param_names[int(pm.group(1))] = inner.name
+    total = 0.0
+    for i, ref in enumerate(refs):
+        full = shape_bytes(comp.shapes[ref])
+        pname = param_names.get(i)
+        if pname is None:
+            total += full
+            continue
+        ds_bytes, other_uses = 0, 0
+        pat = re.compile(rf"%{re.escape(pname)}\b")
+        for inner in called.instrs:
+            if inner.name == pname:
+                continue
+            if pat.search(inner.rest):
+                if inner.op == "dynamic-slice":
+                    ds_bytes += shape_bytes(inner.type_str)
+                else:
+                    other_uses += 1
+        total += full if (other_uses or not ds_bytes) else min(ds_bytes, full)
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0              # per-device matmul(+conv) flops
+    elementwise_flops: float = 0.0
+    bytes_accessed: float = 0.0     # per-device HBM traffic (fusion boundary)
+    collective_bytes: float = 0.0   # per-device link bytes (ring model)
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    loop_multipliers: dict = dataclasses.field(default_factory=dict)
+
+
+def analyze(text: str, total_devices: int = 1) -> HloStats:
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    mult = computation_multipliers(comps, entry)
+    stats = HloStats(loop_multipliers={k: v for k, v in mult.items() if v > 1})
+    # computations reachable only via fusion `calls` should not double-count
+    fused = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if m:
+                    fused.add(m.group(1))
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fused
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                stats.flops += m * _dot_flops(ins, comp)
+            elif op == "convolution":
+                # rare here; approximate via output*2*prod(kernel spatial*Cin)
+                stats.flops += m * 2.0 * shape_elems(ins.type_str)
+            if in_fusion:
+                continue  # bytes counted at the fusion boundary
+            if op in COLLECTIVES:
+                n = _group_size(ins.rest, total_devices)
+                b = shape_bytes(ins.type_str)
+                link = m * _RING.get(op, lambda n: 1.0)(n) * b
+                stats.collective_bytes += link
+                stats.collective_breakdown[op.replace("-start", "")] = \
+                    stats.collective_breakdown.get(op.replace("-start", ""), 0.0) + link
+                stats.collective_count += int(m)
+                stats.bytes_accessed += m * b
+                continue
+            if op in FREE_OPS or op.endswith("-done"):
+                continue
+            out_b = shape_bytes(ins.type_str)
+            opnd_b = 0
+            for ref in re.findall(r"%?([\w.\-]+)", ins.rest.split(")")[0]):
+                if ref in comp.shapes:
+                    opnd_b += shape_bytes(comp.shapes[ref])
+            if op == "fusion":
+                # in-place dynamic-update-slice fusions touch only the updated
+                # slice, not the whole accumulator (XLA updates in place);
+                # charge slice read+write + the non-accumulator operands.
+                slice_b = _dus_fusion_slice_bytes(ins, comps)
+                if slice_b is not None:
+                    opnd_b = sum(
+                        shape_bytes(comp.shapes[ref])
+                        for ref in re.findall(r"%?([\w.\-]+)", ins.rest.split(")")[0])
+                        if ref in comp.shapes
+                        and comp.shapes[ref] != ins.type_str)
+                    out_b = slice_b
+                else:
+                    # operands consumed ONLY via dynamic-slice inside the
+                    # fusion (reading one layer's slice from a scan-carried
+                    # stack) are charged at the slice size, not the stack.
+                    opnd_b = _fusion_operand_bytes(ins, comp, comps)
+            stats.bytes_accessed += m * (out_b + opnd_b)
+            if op == "fusion":
+                stats.elementwise_flops += m * shape_elems(ins.type_str)
+    return stats

@@ -1,0 +1,4 @@
+from .model import ModelConfig, forward, init_cache, init_params  # noqa: F401
+from .steps import (cross_entropy, greedy_generate, loss_fn,  # noqa: F401
+                    make_decode_step, make_eval_step, make_prefill,
+                    make_train_step)

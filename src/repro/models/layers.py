@@ -1,0 +1,402 @@
+"""Core model layers: norms, RoPE, attention (GQA / MLA / sliding-window), GLU FFN.
+
+Pure-functional: every layer is `fn(params, x, ...)` over nested-dict params.
+All matmuls run in the configured compute dtype (bf16 by default); softmax and
+normalization statistics are computed in fp32 for stability.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (production default)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, dh/2)
+    sin = jnp.sin(ang)[..., None, :]                  # (..., S, 1, dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (reference dense path; Pallas kernels live in repro.kernels)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def repeat_kv(k: jax.Array, G: int) -> jax.Array:
+    """(B,S,Hk,dh) -> (B,S,Hk*G,dh).  Keeps heads a single flat dim so the
+    score tensor (B,H,Sq,Skv) shards over the model axis under GSPMD."""
+    return jnp.repeat(k, G, axis=2) if G > 1 else k
+
+
+# Above this many score elements per head-batch, attention() streams over
+# KV chunks (flash-style online softmax) instead of materializing (Sq, Skv).
+_MATERIALIZE_LIMIT = 4096 * 4096
+_CHUNK_Q = 2048
+_CHUNK_K = 2048
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    softcap: float | None = None,
+    force_chunked: bool = False,
+) -> jax.Array:
+    """Reference attention with GQA, causal/sliding-window masking.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hk, dh) with H % Hk == 0.
+    q_offset: absolute position of q[.., 0] (decode: current position).
+    kv_len: number of valid kv entries (decode with pre-allocated cache).
+    Returns (B, Sq, H, dh) in q.dtype.
+
+    Long sequences (prefill_32k etc.) dispatch to the chunked online-softmax
+    form — the jnp analogue of the Pallas flash kernel.
+    """
+    Sq, Skv = q.shape[1], k.shape[1]
+    if ((force_chunked or Sq * Skv > _MATERIALIZE_LIMIT) and Sq > 1
+            and Sq % _CHUNK_Q == 0 and Skv % _CHUNK_K == 0):
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len,
+                                 softcap=softcap)
+    if Sq <= 8 and q.shape[2] != k.shape[2]:
+        # decode: grouped-query scores without materializing repeated KV
+        # (the KV cache may be seq-sharded over the model axis; scores align)
+        return _attention_gqa_decode(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, kv_len=kv_len,
+                                     softcap=softcap)
+    B, Sq, H, dh = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // Hk
+    k = constrain(repeat_kv(k, G), "dp", None, "tp", None)
+    v = constrain(repeat_kv(v, G), "dp", None, "tp", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q * (dh ** -0.5), k,
+                        preferred_element_type=jnp.float32)  # (B,H,Sq,Skv)
+    scores = constrain(scores, "dp", "tp", None, None)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+
+    q_off = jnp.asarray(q_offset)
+    q_pos = q_off.reshape(-1, 1) + jnp.arange(Sq)[None]   # (1|B, Sq)
+    k_pos = jnp.arange(Skv)                               # (Skv,)
+    mask = jnp.ones((q_pos.shape[0], Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos[None, None, :] <= q_pos[..., None]
+    if window is not None:
+        mask &= k_pos[None, None, :] > q_pos[..., None] - window
+    mask = jnp.broadcast_to(mask, (B, Sq, Skv)) if mask.shape[0] == 1 \
+        else mask
+    if kv_len is not None:
+        kvl = jnp.asarray(kv_len)
+        kvl = jnp.broadcast_to(kvl.reshape(-1, 1, 1), (B, 1, 1))
+        mask = mask & (k_pos[None, None, :] < kvl)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = constrain(out, "dp", None, "tp", None)
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def _attention_gqa_decode(q, k, v, *, causal, window, q_offset, kv_len,
+                          softcap) -> jax.Array:
+    """Decode-shape attention keeping KV heads grouped: q (B,Sq,H,dh) vs
+    k/v (B,Skv,Hk,dh); scores (B,Hk,G,Sq,Skv)."""
+    B, Sq, H, dh = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, dh) * (dh ** -0.5)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    q_off = jnp.asarray(q_offset)
+    q_pos = q_off.reshape(-1, 1) + jnp.arange(Sq)[None]   # (1|B, Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((q_pos.shape[0], Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos[None, None, :] <= q_pos[..., None]
+    if window is not None:
+        mask &= k_pos[None, None, :] > q_pos[..., None] - window
+    if kv_len is not None:
+        kvl = jnp.asarray(kv_len).reshape(-1, 1, 1)
+        mask = mask & (k_pos[None, None, :] < kvl)
+    mask = jnp.broadcast_to(mask, (B, Sq, Skv)) if mask.shape[0] == 1 \
+        else mask
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    softcap: float | None = None,
+    chunk_q: int = _CHUNK_Q,
+    chunk_k: int = _CHUNK_K,
+) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with online softmax.
+    Never materializes more than (B,H,chunk_q,chunk_k) scores.  Semantically
+    identical to `attention` (tested); compiles to nested while loops whose
+    trip counts the roofline analyzer accounts for."""
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    dv = v.shape[-1]
+    G = H // k.shape[2]
+    k = constrain(repeat_kv(k, G), "dp", None, "tp", None)
+    v = constrain(repeat_kv(v, G), "dp", None, "tp", None)
+    nq, nk = Sq // chunk_q, Skv // chunk_k
+    qs = (q * (dh ** -0.5)).reshape(B, nq, chunk_q, H, dh).swapaxes(0, 1)
+    ks = k.reshape(B, nk, chunk_k, H, dh).swapaxes(0, 1)
+    vs = v.reshape(B, nk, chunk_k, H, dv).swapaxes(0, 1)
+    q_pos0 = jnp.asarray(q_offset)
+
+    def q_chunk_body(_, qi_blk):
+        qi, q_blk = qi_blk                              # q_blk: (B,cq,H,dh)
+        qp = q_pos0 + qi * chunk_q + jnp.arange(chunk_q)
+
+        def kv_body(carry, ki_blk):
+            m, l, acc = carry
+            ki, k_blk, v_blk = ki_blk
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32)
+            s = constrain(s, "dp", "tp", None, None)
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            kp = ki * chunk_k + jnp.arange(chunk_k)
+            mask = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= kp[None, :] > qp[:, None] - window
+            if kv_len is not None:
+                mask &= kp[None, :] < jnp.asarray(kv_len)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, chunk_q), -jnp.inf, jnp.float32),
+                jnp.zeros((B, H, chunk_q), jnp.float32),
+                jnp.zeros((B, H, chunk_q, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), init, (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,H,cq,dv)
+        return None, out.swapaxes(1, 2)                 # (B,cq,H,dv)
+
+    _, outs = jax.lax.scan(q_chunk_body, None, (jnp.arange(nq), qs))
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, dv)
+    return constrain(out, "dp", None, "tp", None).astype(q.dtype)
+
+
+def attention_ring_cache(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    pos: jax.Array,
+    window: int,
+) -> jax.Array:
+    """Decode attention against a rolling (ring) KV cache of size `window`.
+
+    q: (B,1,H,dh); caches: (B,window,Hk,dh) written at slot pos % window.
+    Entry at ring slot s holds absolute position p(s) such that p ≡ s (mod W)
+    and p <= pos. Valid iff p(s) > pos - window and p(s) >= 0.
+    """
+    B, _, H, dh = q.shape
+    W, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    k_cache = constrain(repeat_kv(k_cache, G), "dp", None, "tp", None)
+    v_cache = constrain(repeat_kv(v_cache, G), "dp", None, "tp", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q * (dh ** -0.5), k_cache,
+                        preferred_element_type=jnp.float32)  # (B,H,1,W)
+    scores = constrain(scores, "dp", "tp", None, None)
+    slots = jnp.arange(W)
+    posa = jnp.asarray(pos).reshape(-1, 1)            # (1|B, 1)
+    cur = posa % W
+    # absolute position stored in each slot (newest write is at `cur`)
+    p = posa - ((cur - slots[None, :]) % W)           # (1|B, W)
+    valid = (p >= 0) & (p > posa - window)
+    valid = jnp.broadcast_to(valid, (B, W))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU feed-forward
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def ffn_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def ffn(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = _ACTS[act](constrain(x @ params["w_gate"], "dp", None, "tp"))
+    u = constrain(x @ params["w_up"], "dp", None, "tp")
+    return (g * u) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + core + out-proj)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype) -> Params:
+    d, H, Hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_q": dense_init(k1, (d, H * dh), dtype),
+        "w_k": dense_init(k2, (d, Hk * dh), dtype),
+        "w_v": dense_init(k3, (d, Hk * dh), dtype),
+        "w_o": dense_init(k4, (H * dh, d), dtype),
+    }
+
+
+def gqa_project_qkv(params: Params, x: jax.Array, cfg, positions: jax.Array):
+    B, S, _ = x.shape
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = constrain((x @ params["w_q"]).reshape(B, S, H, dh), "dp", None, "tp", None)
+    k = constrain((x @ params["w_k"]).reshape(B, S, Hk, dh), "dp", None, "tp", None)
+    v = constrain((x @ params["w_v"]).reshape(B, S, Hk, dh), "dp", None, "tp", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2) block
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype) -> Params:
+    d, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # queries are full-rank in V2-Lite (q_lora_rank = 0)
+        "w_q": dense_init(ks[0], (d, H * (dh + dr)), dtype),
+        "w_dkv": dense_init(ks[1], (d, r), dtype),       # down-proj -> latent
+        "w_kr": dense_init(ks[2], (d, dr), dtype),       # shared rope key
+        "w_uk": dense_init(ks[3], (r, H * dh), dtype),   # up-proj keys
+        "w_uv": dense_init(ks[4], (r, H * dh), dtype),   # up-proj values
+        "w_o": dense_init(ks[5], (H * dh, d), dtype),
+    }
+
+
+def mla_latent(params: Params, x: jax.Array, cfg, positions: jax.Array):
+    """Compute the compressed KV latent + rope-key for x: returns
+    (c_kv: (B,S,r), k_rope: (B,S,1,dr)) — this is exactly what the MLA
+    decode cache stores (memory = r + dr per token, not 2*H*dh)."""
+    B, S, _ = x.shape
+    c_kv = x @ params["w_dkv"]                         # (B,S,r)
+    k_rope = (x @ params["w_kr"]).reshape(B, S, 1, cfg.rope_head_dim)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attend(params: Params, x: jax.Array, c_kv: jax.Array, k_rope: jax.Array,
+               cfg, positions: jax.Array, *, kv_len=None, causal=True):
+    """MLA attention of queries from x against (possibly cached) latents."""
+    B, Sq, _ = x.shape
+    Skv = c_kv.shape[1]
+    H, dh, dr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q = (x @ params["w_q"]).reshape(B, Sq, H, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, Skv, H, dh)
+    v = (c_kv @ params["w_uv"]).reshape(B, Skv, H, dh)
+    # concat nope+rope per head; rope key is shared (MQA-style) across heads
+    k_rope_b = jnp.broadcast_to(k_rope, (B, Skv, 1, dr))
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope_b, (B, Skv, H, dr))], axis=-1)
+    q_off = positions[0] if positions.ndim == 1 else 0
+    # attention() scales by 1/sqrt(q.shape[-1]) = 1/sqrt(dh+dr): the MLA scale.
+    out = attention(qf, kf, v, causal=causal, q_offset=q_off, kv_len=kv_len,
+                    force_chunked=getattr(cfg, "attn_force_chunked", False))
+    return out.reshape(B, Sq, H * dh) @ params["w_o"]

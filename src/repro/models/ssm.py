@@ -1,0 +1,371 @@
+"""State-space / recurrent mixers: Mamba (selective SSM) and xLSTM's mLSTM.
+
+Both are implemented in *chunkwise-parallel* form for train/prefill
+(sub-quadratic: O(S·cs) work materializing only chunk-local quadratics) plus an
+O(1)-state decode step.  `repro.kernels.ssm_scan` provides the Pallas version
+of the Mamba chunk kernel; these jnp forms are the reference/distribution path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import constrain
+
+from .layers import dense_init
+
+Params = dict[str, Any]
+
+
+# ===========================================================================
+# Mamba (Mamba-1, diagonal A)
+# ===========================================================================
+
+def mamba_init(key, cfg, dtype) -> Params:
+    d, di, N, dc = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state_dim, cfg.ssm_conv_dim
+    dtr = cfg.ssm_dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype, scale=1.0 / math.sqrt(dc)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _mamba_inputs(params, x, cfg):
+    """Shared pre-scan computation.  Returns (dt, B_ssm, C_ssm, z, x_conv).
+    The ×N-expanded tensors (dA, dBx: (.., di, N)) are NEVER materialized for
+    the full sequence — only per chunk inside the scan body (memory: a full-
+    seq (B,S,di,N) fp32 expansion is ~petabyte-scale for jamba train_4k)."""
+    B, S, _ = x.shape
+    di, N, dtr = cfg.ssm_d_inner, cfg.ssm_state_dim, cfg.ssm_dt_rank
+    xz = constrain(x @ params["in_proj"], "dp", None, "tp")
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # (B,S,di) each
+    x_conv = causal_conv1d(x_in, params["conv_w"], params["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    dbc = x_conv @ params["x_proj"]                        # (B,S,dtr+2N)
+    dt_lr = dbc[..., :dtr]
+    B_ssm = dbc[..., dtr:dtr + N].astype(jnp.float32)      # (B,S,N)
+    C_ssm = dbc[..., dtr + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_lr @ params["dt_proj"] + params["dt_bias"])  # (B,S,di)
+    dt = constrain(dt.astype(jnp.float32), "dp", None, "tp")
+    return dt, B_ssm, C_ssm, z, x_conv
+
+
+def _mamba_expand(params, dt_c, B_c, xc_c):
+    """Per-chunk discretization: dA, dBx (B,L,di,N) — chunk-local only."""
+    A = -jnp.exp(params["A_log"])                          # (di,N)
+    dA = jnp.exp(dt_c[..., None] * A)
+    dBx = (dt_c * xc_c.astype(jnp.float32))[..., None] * B_c[..., None, :]
+    return dA, dBx
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv over the sequence dim.  x: (B,S,di), w: (dc,di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc))
+    return out + b
+
+
+def _scan_chunk(h0, dA, dBx):
+    """First-order recurrence over one chunk via associative scan.
+    h0: (B,di,N); dA,dBx: (B,L,di,N).  Returns (h_all (B,L,di,N), h_last)."""
+    def combine(a, b):
+        (A1, b1), (A2, b2) = a, b
+        return A1 * A2, b1 * A2 + b2
+    Acum, bcum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = bcum + Acum * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(params: Params, x: jax.Array, cfg, h0=None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba mixer (chunked).  Returns (y, h_last)."""
+    B, S, _ = x.shape
+    di, N = cfg.ssm_d_inner, cfg.ssm_state_dim
+    cs = min(cfg.ssm_chunk, S)
+    if S % cs:
+        cs = math.gcd(S, cs)  # fallback for odd prefill lengths
+    dt, B_ssm, C_ssm, z, x_conv = _mamba_inputs(params, x, cfg)
+    nck = S // cs
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def body(h, inp):
+        dt_c, B_c, C_c, xc_c = inp
+        dA_c, dBx_c = _mamba_expand(params, dt_c, B_c, xc_c)
+        h_all, h_last = _scan_chunk(h, constrain(dA_c, "dp", None, "tp", None),
+                                    constrain(dBx_c, "dp", None, "tp", None))
+        y_c = jnp.einsum("blds,bls->bld", h_all, C_c)
+        y_c = y_c + params["D"] * xc_c.astype(jnp.float32)
+        return h_last, constrain(y_c, "dp", None, "tp")
+
+    # remat each chunk: the (B,cs,di,N) state expansion is recomputed in the
+    # backward instead of stacked across chunks (70TB-scale for jamba).
+    body = jax.checkpoint(body)
+    reshape = lambda a: a.reshape(B, nck, cs, *a.shape[2:]).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(
+        body, h0, (reshape(dt), reshape(B_ssm), reshape(C_ssm), reshape(x_conv)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], h_last
+
+
+def mamba_mixer_ref(params: Params, x: jax.Array, cfg) -> jax.Array:
+    """Sequential oracle (lax.scan over every step) — for tests."""
+    B, S, _ = x.shape
+    dt, B_ssm, C_ssm, z, x_conv = _mamba_inputs(params, x, cfg)
+    dA, dBx = _mamba_expand(params, dt, B_ssm, x_conv)
+    h0 = jnp.zeros((B, cfg.ssm_d_inner, cfg.ssm_state_dim), jnp.float32)
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        return h, jnp.einsum("bds,bs->bd", h, C_t)
+
+    _, ys = jax.lax.scan(step, h0, (dA.swapaxes(0, 1), dBx.swapaxes(0, 1),
+                                    C_ssm.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + params["D"] * x_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_decode_step(params: Params, x: jax.Array, state: dict, cfg):
+    """One-token decode.  x: (B,1,d).  state: {"h": (B,di,N), "conv": (B,dc-1,di)}.
+    Returns (y (B,1,d), new_state)."""
+    B = x.shape[0]
+    di, N, dtr, dc = (cfg.ssm_d_inner, cfg.ssm_state_dim, cfg.ssm_dt_rank,
+                      cfg.ssm_conv_dim)
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # (B,1,di)
+    conv_buf = jnp.concatenate([state["conv"], x_in], axis=1)  # (B,dc,di)
+    x_conv = jnp.einsum("bcd,cd->bd", conv_buf, params["conv_w"]) + params["conv_b"]
+    x_conv = jax.nn.silu(x_conv)[:, None]                  # (B,1,di)
+    dbc = x_conv @ params["x_proj"]
+    dt_lr = dbc[..., :dtr]
+    B_ssm = dbc[..., dtr:dtr + N].astype(jnp.float32)[:, 0]
+    C_ssm = dbc[..., dtr + N:].astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(dt_lr @ params["dt_proj"] + params["dt_bias"])
+    dt = dt.astype(jnp.float32)[:, 0]                      # (B,di)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                        # (B,di,N)
+    dBx = (dt * x_conv.astype(jnp.float32)[:, 0])[..., None] * B_ssm[:, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, C_ssm) + params["D"] * x_conv.astype(jnp.float32)[:, 0]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"h": h, "conv": conv_buf[:, 1:]}
+
+
+def mamba_state_init(B, cfg):
+    return {
+        "h": jnp.zeros((B, cfg.ssm_d_inner, cfg.ssm_state_dim), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv_dim - 1, cfg.ssm_d_inner), cfg.dtype),
+    }
+
+
+# ===========================================================================
+# mLSTM (xLSTM, matrix memory with exponential gating)
+# ===========================================================================
+
+def mlstm_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    pf = cfg.mlstm_proj_factor
+    dp = pf * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * dp), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_dim, dp), dtype, scale=0.5),
+        "conv_b": jnp.zeros((dp,), dtype),
+        "w_q": dense_init(ks[2], (dp, dp), dtype),
+        "w_k": dense_init(ks[3], (dp, dp), dtype),
+        "w_v": dense_init(ks[4], (dp, dp), dtype),
+        "w_i": dense_init(ks[5], (dp, H), jnp.float32, scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[6], (dp, H), jnp.float32, scale=0.02),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "gn_scale": jnp.ones((dp,), dtype),
+        "down_proj": dense_init(ks[7], (dp, d), dtype),
+    }
+
+
+def _mlstm_qkvif(params, x_in, cfg):
+    """x_in: (B,S,dp) (post up-proj mlstm branch).  Returns q,k,v (B,H,S,dh)
+    fp32 and gates i,f (B,H,S) fp32 (raw pre-activations)."""
+    B, S, dp = x_in.shape
+    H = cfg.num_heads
+    dh = dp // H
+    x_conv = jax.nn.silu(causal_conv1d(x_in, params["conv_w"], params["conv_b"]))
+    to_heads = lambda a: constrain(
+        a.reshape(B, S, H, dh).transpose(0, 2, 1, 3).astype(jnp.float32),
+        "dp", None, None, "tp")
+    q = to_heads(x_conv @ params["w_q"])
+    k = to_heads(x_conv @ params["w_k"]) / math.sqrt(dh)
+    v = to_heads(x_in @ params["w_v"])
+    i_raw = (x_conv.astype(jnp.float32) @ params["w_i"] + params["b_i"])
+    f_raw = (x_conv.astype(jnp.float32) @ params["w_f"] + params["b_f"])
+    return q, k, v, i_raw.transpose(0, 2, 1), f_raw.transpose(0, 2, 1)
+
+
+def _mlstm_chunk(q, k, v, i_raw, f_raw, carry):
+    """One chunk of stabilized mLSTM.  All (B,H,L,·) fp32.
+    carry = (C (B,H,dh,dh), n (B,H,dh), m (B,H))."""
+    C_p, n_p, m_p = carry
+    B, H, L, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_raw)                      # (B,H,L)
+    F = jnp.cumsum(logf, axis=-1)                         # cumulative within chunk
+    # pairwise decay D[t,s] = F_t - F_s + i_s   (valid for s<=t)
+    Dm = F[..., :, None] - F[..., None, :] + i_raw[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(tri, Dm, -jnp.inf)
+    m_intra = Dm.max(axis=-1)                             # (B,H,L)
+    m_t = jnp.maximum(F + m_p[..., None], m_intra)
+    m_t = jnp.maximum(m_t, -60.0)                         # floor to avoid inf ratios
+    scores = jnp.exp(Dm - m_t[..., None])                 # (B,H,L,L)
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    num = jnp.einsum("bhts,bhsv->bhtv", scores * qk, v)
+    den = (scores * qk).sum(-1)
+    inter_w = jnp.exp(F + m_p[..., None] - m_t)           # (B,H,L)
+    num = num + inter_w[..., None] * jnp.einsum("bhtd,bhdv->bhtv", q, C_p)
+    den = den + inter_w * jnp.einsum("bhtd,bhd->bht", q, n_p)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # ---- carry update to end of chunk
+    last = L - 1
+    m_new = jnp.maximum(F[..., last:] + m_p[..., None], m_intra[..., last:])[..., 0]
+    m_new = jnp.maximum(m_new, -60.0)
+    wS = jnp.exp(F[..., last, None] - F + i_raw - m_new[..., None])  # (B,H,L)
+    C_new = (jnp.exp(F[..., last] + m_p - m_new)[..., None, None] * C_p
+             + jnp.einsum("bhs,bhsd,bhsv->bhdv", wS, k, v))
+    n_new = (jnp.exp(F[..., last] + m_p - m_new)[..., None] * n_p
+             + jnp.einsum("bhs,bhsd->bhd", wS, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_mixer(params: Params, x: jax.Array, cfg, carry=None):
+    """Full mLSTM block body.  x: (B,S,d) -> (y (B,S,d), carry)."""
+    B, S, d = x.shape
+    dp = cfg.mlstm_proj_factor * d
+    H = cfg.num_heads
+    dh = dp // H
+    xz = x @ params["up_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(params, x_in, cfg)
+    cs = min(cfg.ssm_chunk, S)
+    if S % cs:
+        cs = math.gcd(S, cs)
+    nck = S // cs
+    if carry is None:
+        carry = mlstm_carry_init(B, H, dh)
+
+    resh = lambda a: a.reshape(B, H, nck, cs, *a.shape[3:]).transpose(2, 0, 1, 3, *range(4, a.ndim + 1))
+    def body(c, inp):
+        qc, kc, vc, ic, fc = inp
+        h, c = _mlstm_chunk(qc, kc, vc, ic, fc, c)
+        return c, h
+    body = jax.checkpoint(body)  # recompute (L,L) gate matrices in the bwd
+    carry, hs = jax.lax.scan(body, carry, (resh(q), resh(k), resh(v), resh(i_raw), resh(f_raw)))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)  # (B,H,S,dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, dp)
+    # per-head group norm
+    hg = h.reshape(B, S, H, dh)
+    mu = hg.mean(-1, keepdims=True)
+    var = hg.var(-1, keepdims=True)
+    hg = (hg - mu) * jax.lax.rsqrt(var + 1e-6)
+    h = (hg.reshape(B, S, dp) * params["gn_scale"]).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return h @ params["down_proj"], carry
+
+
+def mlstm_carry_init(B, H, dh):
+    return (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H), -60.0, jnp.float32))
+
+
+def mlstm_mixer_ref(params: Params, x: jax.Array, cfg) -> jax.Array:
+    """Sequential per-step oracle."""
+    B, S, d = x.shape
+    dp = cfg.mlstm_proj_factor * d
+    H = cfg.num_heads
+    dh = dp // H
+    xz = x @ params["up_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(params, x_in, cfg)
+    carry = mlstm_carry_init(B, H, dh)
+
+    def step(c, inp):
+        qt, kt, vt, it, ft = inp                           # (B,H,dh) / (B,H)
+        h, c = _mlstm_cell_step(qt, kt, vt, it, ft, c)
+        return c, h
+
+    qs, ks_, vs = (a.transpose(2, 0, 1, 3) for a in (q, k, v))
+    is_, fs = (a.transpose(2, 0, 1) for a in (i_raw, f_raw))
+    _, hs = jax.lax.scan(step, carry, (qs, ks_, vs, is_, fs))
+    h = hs.transpose(1, 2, 0, 3).transpose(0, 2, 1, 3).reshape(B, S, dp)
+    hg = h.reshape(B, S, H, dh)
+    mu = hg.mean(-1, keepdims=True)
+    var = hg.var(-1, keepdims=True)
+    hg = (hg - mu) * jax.lax.rsqrt(var + 1e-6)
+    h = (hg.reshape(B, S, dp) * params["gn_scale"]).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return h @ params["down_proj"]
+
+
+def _mlstm_cell_step(qt, kt, vt, it, ft, carry):
+    """Single-step stabilized mLSTM cell.  qt,kt,vt: (B,H,dh); it,ft: (B,H)."""
+    C_p, n_p, m_p = carry
+    logf = jax.nn.log_sigmoid(ft)
+    m_t = jnp.maximum(logf + m_p, it)
+    m_t = jnp.maximum(m_t, -60.0)
+    fw = jnp.exp(logf + m_p - m_t)[..., None]
+    iw = jnp.exp(it - m_t)[..., None]
+    C_t = fw[..., None] * C_p + iw[..., None] * kt[..., :, None] * vt[..., None, :]
+    n_t = fw * n_p + iw * kt
+    num = jnp.einsum("bhd,bhdv->bhv", qt, C_t)
+    den = jnp.einsum("bhd,bhd->bh", qt, n_t)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    return h, (C_t, n_t, m_t)
+
+
+def mlstm_decode_step(params: Params, x: jax.Array, state: dict, cfg):
+    """One-token decode.  x: (B,1,d).  state: {"carry": (C,n,m), "conv": (B,dc-1,dp)}."""
+    B = x.shape[0]
+    d = cfg.d_model
+    dp = cfg.mlstm_proj_factor * d
+    H = cfg.num_heads
+    dh = dp // H
+    xz = x @ params["up_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # (B,1,dp)
+    conv_buf = jnp.concatenate([state["conv"], x_in], axis=1)
+    x_conv = jnp.einsum("bcd,cd->bd", conv_buf, params["conv_w"]) + params["conv_b"]
+    x_conv = jax.nn.silu(x_conv)                           # (B,dp)
+    qt = (x_conv @ params["w_q"]).reshape(B, H, dh).astype(jnp.float32)
+    kt = (x_conv @ params["w_k"]).reshape(B, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    vt = (x_in[:, 0] @ params["w_v"]).reshape(B, H, dh).astype(jnp.float32)
+    it = (x_conv.astype(jnp.float32) @ params["w_i"] + params["b_i"])
+    ft = (x_conv.astype(jnp.float32) @ params["w_f"] + params["b_f"])
+    h, carry = _mlstm_cell_step(qt, kt, vt, it, ft, state["carry"])
+    mu = h.mean(-1, keepdims=True)
+    var = h.var(-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + 1e-6)
+    h = (h.reshape(B, dp) * params["gn_scale"]).astype(x.dtype)
+    h = (h * jax.nn.silu(z[:, 0]))[:, None]
+    return h @ params["down_proj"], {"carry": carry, "conv": conv_buf[:, 1:]}
+
+
+def mlstm_state_init(B, cfg):
+    dp = cfg.mlstm_proj_factor * cfg.d_model
+    H = cfg.num_heads
+    return {"carry": mlstm_carry_init(B, H, dp // H),
+            "conv": jnp.zeros((B, cfg.ssm_conv_dim - 1, dp), cfg.dtype)}

@@ -1,0 +1,208 @@
+"""Step functions: loss, train_step, prefill, decode — the jit/pjit units.
+
+These are what the launcher lowers for the dry-run and what the MuxFlow
+multiplexer executes (decode = online workload, train = offline workload).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import constrain
+
+from .model import ModelConfig, forward, init_cache, init_params  # noqa: F401
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, vocab_size: int,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross-entropy.  logits: (B,S,Vpad); targets: (B,S).
+    Padded-vocab columns are excluded from the partition function."""
+    Vpad = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if Vpad > vocab_size:
+        pad_bias = jnp.where(jnp.arange(Vpad) < vocab_size, 0.0, -1e9)
+        lf = lf + pad_bias
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.clip(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def chunked_cross_entropy(x, lm_head, targets, vocab_size, mask,
+                          chunk: int = 8192):
+    """Fused loss: never materializes (B,S,Vpad) logits.  Scans lm_head in
+    vocab chunks with a streaming log-sum-exp; each chunk's logits are
+    recomputed in the backward (jax.checkpoint).  x: (B,S,d) post-norm
+    hiddens; lm_head: (d, Vpad)."""
+    d, Vpad = lm_head.shape
+    if Vpad % chunk:
+        chunk = math.gcd(Vpad, chunk) or Vpad
+    nck = Vpad // chunk
+    ws = lm_head.reshape(d, nck, chunk).transpose(1, 0, 2)   # (nck, d, chunk)
+    B, S, _ = x.shape
+
+    def body(carry, wi):
+        m, s, gold = carry
+        w, i = wi
+        logits_c = (x @ w).astype(jnp.float32)               # (B,S,chunk)
+        col = i * chunk + jnp.arange(chunk)
+        logits_c = jnp.where(col[None, None, :] < vocab_size, logits_c, -1e9)
+        m_new = jnp.maximum(m, logits_c.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            logits_c - m_new[..., None]).sum(-1)
+        local = targets - i * chunk
+        in_c = (local >= 0) & (local < chunk)
+        g = jnp.take_along_axis(logits_c, jnp.clip(local, 0, chunk - 1)[..., None],
+                                axis=-1)[..., 0]
+        gold = gold + jnp.where(in_c, g, 0.0)
+        return (m_new, s, gold), None
+
+    init = (jnp.full((B, S), -1e30, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, s, gold), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (ws, jnp.arange(nck)))
+    nll = (m + jnp.log(jnp.maximum(s, 1e-30))) - gold
+    nll = nll * mask
+    return nll.sum() / jnp.clip(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """Next-token LM loss (+ MoE aux).  For VLM inputs the image-patch
+    positions are excluded from the loss.  cfg.fused_loss streams the vocab
+    dim instead of materializing (B,S,Vpad) logits."""
+    toks = batch["tokens"]
+    n_p = (batch["patch_embeds"].shape[1]
+           if cfg.frontend == "patch" and "patch_embeds" in batch else 0)
+    targets = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+    mask = jnp.ones(toks.shape, jnp.float32).at[:, -1].set(0.0)
+    if getattr(cfg, "fused_loss", False):
+        hidden, aux = forward(params, cfg, batch, mode="train_hidden")
+        hidden = constrain(hidden, "dp", None, None)
+        if n_p:
+            hidden = hidden[:, n_p:]
+        ce = chunked_cross_entropy(hidden, params["lm_head"], targets,
+                                   cfg.vocab_size, mask)
+    else:
+        logits, aux = forward(params, cfg, batch, mode="train")
+        logits = constrain(logits, "dp", None, "tp")
+        if n_p:
+            logits = logits[:, n_p:]
+        ce = cross_entropy(logits, targets, cfg.vocab_size, mask)
+    return ce + cfg.moe_aux_weight * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 enables gradient accumulation: the global batch is split
+    along dim 0 and scanned, with fp32 grad accumulation (grads inherit the
+    FSDP parameter sharding, so the accumulator is ZeRO-sharded).  This is how
+    very large models (jamba-398B) fit their activations on a pod.
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(p, cfg, batch),
+                                  has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc, loss_a, ce_a, aux_a = carry
+                (loss, (ce, aux)), grads = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   acc, grads)
+                return (acc, loss_a + loss, ce_a + ce, aux_a + aux), None
+
+            zero = jnp.zeros((), jnp.float32)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                body, (acc0, zero, zero, zero), micro)
+            scale = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            loss, ce, aux = loss * scale, ce * scale, aux * scale
+        params, opt_state, gnorm = optimizer.update(params, grads, opt_state)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, (ce, aux) = loss_fn(params, cfg, batch)
+        return {"loss": loss, "ce": ce}
+    return eval_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """prefill(params, batch) -> (next_token_logits (B,Vpad), cache)."""
+
+    def prefill(params, batch):
+        logits, cache, _aux = forward(params, cfg, batch, mode="prefill")
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_step(params, cache, tokens (B,1), pos) -> (logits (B,Vpad), cache).
+
+    This is the online-serving unit MuxFlow protects: one token for the whole
+    batch against the standing cache."""
+
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = forward(params, cfg, {"tokens": tokens}, mode="decode",
+                                cache=cache, pos=pos)
+        return logits, cache
+
+    return decode_step
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, steps: int):
+    """Tiny sampling loop for examples/tests: prefill then greedy decode."""
+    prefill = make_prefill(cfg)
+    decode = make_decode_step(cfg)
+    logits, cache = prefill(params, batch)
+    # re-init a roomier cache for generation
+    B = batch["tokens"].shape[0]
+    S0 = batch["tokens"].shape[1] + (batch.get("patch_embeds").shape[1]
+                                     if cfg.frontend == "patch" and "patch_embeds" in batch else 0)
+    cap = S0 + steps
+    full_cache = init_cache(cfg, B, cap, src_len=batch.get("src_embeds", jnp.zeros((1, 0, 1))).shape[1])
+    full_cache = _copy_prefix_cache(cfg, cache, full_cache)
+    toks = [jnp.argmax(logits[:, :cfg.vocab_size], -1)]
+    cache = full_cache
+    for i in range(steps):
+        logits, cache = decode(params, cache, toks[-1][:, None], S0 + i)
+        toks.append(jnp.argmax(logits[:, :cfg.vocab_size], -1))
+    return jnp.stack(toks, axis=1)
+
+
+def _copy_prefix_cache(cfg, src, dst):
+    """Copy a prefill cache (length S0) into a larger decode cache."""
+    out = []
+    for ci, (mixer, _) in enumerate(cfg.pattern):
+        d = dict(dst[ci])
+        for k, v in src[ci].items():
+            if k in ("k", "v", "ckv", "kr", "xk", "xv") and v.ndim >= 3:
+                d[k] = jax.lax.dynamic_update_slice(
+                    dst[ci][k], v.astype(dst[ci][k].dtype), (0,) * v.ndim)
+            else:
+                d[k] = v
+        out.append(d)
+    return tuple(out)

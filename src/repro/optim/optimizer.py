@@ -1,0 +1,129 @@
+"""Optimizers: AdamW (training) and momentum SGD (the paper's predictor
+optimizer).  Pure-pytree, no external deps; optimizer moments are fp32 and
+inherit the parameter sharding (FSDP params => ZeRO-sharded moments for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), g
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    master_weights: bool = False   # keep an fp32 master copy of bf16 params
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    def init(self, params) -> dict:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.cfg.master_weights:
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(self, params, grads, state):
+        cfg = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        lr = cosine_lr(cfg, step)
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+        ref = state.get("master", params)
+
+        def upd(p_ref, g, m, v):
+            gf = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * gf
+            v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+            mhat = m / b1c
+            vhat = v / b2c
+            pf = p_ref.astype(jnp.float32)
+            pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
+            return pf, m, v
+
+        flat_ref, treedef = jax.tree.flatten(ref)
+        outs = [upd(p, g, m, v) for p, g, m, v in zip(
+            flat_ref, jax.tree.leaves(grads), jax.tree.leaves(state["m"]),
+            jax.tree.leaves(state["v"]))]
+        new_master = treedef.unflatten([o[0] for o in outs])
+        new_m = treedef.unflatten([o[1] for o in outs])
+        new_v = treedef.unflatten([o[2] for o in outs])
+        new_params = jax.tree.map(lambda mw, p: mw.astype(p.dtype), new_master, params)
+        new_state = {"m": new_m, "v": new_v, "step": step}
+        if cfg.master_weights:
+            new_state["master"] = new_master
+        return new_params, new_state, gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentumSGDConfig:
+    """The paper trains the speed-predictor MLPs 'with momentum SGD optimizer
+    in PyTorch' — this is that optimizer, in JAX."""
+    lr: float = 1e-2
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+
+class MomentumSGD:
+    def __init__(self, cfg: MomentumSGDConfig):
+        self.cfg = cfg
+
+    def init(self, params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        cfg = self.cfg
+
+        def upd(p, g, mu):
+            gf = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+            mu = cfg.momentum * mu + gf
+            d = gf + cfg.momentum * mu if cfg.nesterov else mu
+            return (p.astype(jnp.float32) - cfg.lr * d).astype(p.dtype), mu
+
+        flat_p, treedef = jax.tree.flatten(params)
+        outs = [upd(p, g, mu) for p, g, mu in zip(
+            flat_p, jax.tree.leaves(grads), jax.tree.leaves(state["mu"]))]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_mu = treedef.unflatten([o[1] for o in outs])
+        return new_p, {"mu": new_mu, "step": state["step"] + 1}, global_norm(grads)

@@ -1,0 +1,110 @@
+"""Cluster-runtime fault tolerance: heartbeats, failure detection, elastic
+membership, straggler mitigation.
+
+At MuxFlow scale (20 000+ GPUs / 1 000+ TPU hosts) node failure is routine:
+offline jobs checkpoint-and-restart (checkpoint/), device health feeds the
+SysMonitor (straggler == Unhealthy: its offline job is evicted off the
+critical path), and membership changes simply rebuild the next scheduling
+round's bipartite graph (core/scheduler.py) — elasticity by rescheduling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class NodeState:
+    node_id: int
+    last_heartbeat: float
+    healthy: bool = True
+    slow_ticks: int = 0            # consecutive straggler observations
+    step_time_ema: float | None = None
+
+
+class HeartbeatMonitor:
+    """Failure detector: a node missing `timeout_s` of heartbeats is dead;
+    a node whose step time exceeds `straggler_factor` × cluster median for
+    `straggler_patience` consecutive reports is a straggler."""
+
+    def __init__(self, n_nodes: int, *, timeout_s: float = 30.0,
+                 straggler_factor: float = 1.5, straggler_patience: int = 3,
+                 now: float | None = None):
+        t = time.monotonic() if now is None else now
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.straggler_patience = straggler_patience
+        self.nodes = {i: NodeState(i, t) for i in range(n_nodes)}
+
+    def heartbeat(self, node_id: int, *, step_time: float | None = None,
+                  now: float | None = None) -> None:
+        t = time.monotonic() if now is None else now
+        n = self.nodes.setdefault(node_id, NodeState(node_id, t))
+        n.last_heartbeat = t
+        if step_time is not None:
+            n.step_time_ema = (step_time if n.step_time_ema is None
+                               else 0.7 * n.step_time_ema + 0.3 * step_time)
+
+    def check(self, now: float | None = None) -> dict:
+        """Returns {"dead": [...], "stragglers": [...], "alive": [...]}."""
+        t = time.monotonic() if now is None else now
+        dead, alive = [], []
+        for n in self.nodes.values():
+            (dead if t - n.last_heartbeat > self.timeout_s else alive).append(n)
+        times = sorted(n.step_time_ema for n in alive if n.step_time_ema)
+        median = times[len(times) // 2] if times else None
+        stragglers = []
+        for n in alive:
+            if (median and n.step_time_ema
+                    and n.step_time_ema > self.straggler_factor * median):
+                n.slow_ticks += 1
+                if n.slow_ticks >= self.straggler_patience:
+                    stragglers.append(n.node_id)
+            else:
+                n.slow_ticks = 0
+        return {"dead": [n.node_id for n in dead],
+                "stragglers": stragglers,
+                "alive": [n.node_id for n in alive]}
+
+    def remove(self, node_id: int) -> None:
+        self.nodes.pop(node_id, None)
+
+    def join(self, node_id: int, now: float | None = None) -> None:
+        t = time.monotonic() if now is None else now
+        self.nodes[node_id] = NodeState(node_id, t)
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Outcome of a membership change: which mesh to rebuild and from which
+    checkpoint step to resume."""
+    world: list
+    resume_step: int
+    reason: str
+
+
+class ElasticCoordinator:
+    """Couples the failure detector with checkpoint/restart: on membership
+    change, emit a plan (new world, resume step).  The caller re-creates the
+    mesh from the surviving hosts and restores with resharding — checkpoint
+    restore is mesh-shape agnostic (see checkpoint/checkpointing.py)."""
+
+    def __init__(self, monitor: HeartbeatMonitor, get_ckpt_step):
+        self.monitor = monitor
+        self.get_ckpt_step = get_ckpt_step
+        self._last_world: tuple | None = None
+
+    def poll(self, now: float | None = None) -> ElasticPlan | None:
+        status = self.monitor.check(now=now)
+        world = tuple(sorted(status["alive"]))
+        if self._last_world is None:
+            self._last_world = world
+            return None
+        if world != self._last_world:
+            reason = ("node_failure" if len(world) < len(self._last_world)
+                      else "node_join")
+            self._last_world = world
+            return ElasticPlan(world=list(world),
+                               resume_step=self.get_ckpt_step(),
+                               reason=reason)
+        return None

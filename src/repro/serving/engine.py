@@ -1,0 +1,134 @@
+"""Continuous-batching serving engine — the online workload's front-end.
+
+The production shape of the paper's online container: a slot-based decode
+engine (vLLM-style continuous batching, fixed-shape for TPU):
+
+  * a fixed pool of B decode slots over one pre-allocated KV cache,
+  * every engine step runs ONE fixed-shape `decode_step` over all slots with
+    *per-slot positions* (the model's decode path supports ragged positions),
+  * new requests are admitted into free slots and their prompts are
+    piggy-backed: while a slot is still prefilling, its input token is the
+    next prompt token and its logits are discarded; once the prompt is
+    consumed the slot switches to generation,
+  * finished sequences retire and free their slot immediately.
+
+Fixed shapes mean exactly one compiled program regardless of traffic — which
+is what makes MuxFlow's duty-cycle throttling well-behaved on TPU (no
+recompilation storms when the multiplexer squeezes offline steps between
+engine steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache
+from repro.models.model import ModelConfig, forward
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    request_id: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int
+    arrival: float = 0.0
+    output: list = dataclasses.field(default_factory=list)
+    done_at: float | None = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 8
+    kv_capacity: int = 256
+    eos_id: int | None = None
+    greedy: bool = True
+
+
+class ServingEngine:
+    """Slot-based continuous batching over the model zoo's decode step."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 ecfg: EngineConfig = EngineConfig()):
+        assert cfg.frontend == "none" and not cfg.enc_layers, \
+            "engine currently serves plain decoder LMs"
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        B = ecfg.num_slots
+        self.cache = init_cache(cfg, B, ecfg.kv_capacity)
+        self.slot_req: list[ServeRequest | None] = [None] * B
+        self.slot_pos = np.zeros(B, np.int32)       # position being written
+        self.slot_prompt_left = np.zeros(B, np.int32)
+        self.slot_tok = np.zeros((B, 1), np.int32)
+        self.waiting: list[ServeRequest] = []
+        self.finished: list[ServeRequest] = []
+        self.steps = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: forward(p, cfg, {"tokens": t},
+                                         mode="decode", cache=c, pos=pos))
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        assert len(req.prompt) >= 1
+        assert len(req.prompt) + req.max_new_tokens < self.ecfg.kv_capacity
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.ecfg.num_slots):
+            if self.slot_req[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting.pop(0)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = 0
+            self.slot_prompt_left[slot] = len(req.prompt)
+            self.slot_tok[slot, 0] = req.prompt[0]
+
+    # -- stepping -----------------------------------------------------------
+    def step(self, now: float = 0.0) -> int:
+        """Admit + one fixed-shape decode step.  Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.slot_tok),
+            jnp.asarray(self.slot_pos))
+        self.steps += 1
+        logits = np.asarray(logits[:, :self.cfg.vocab_size])
+        for slot in active:
+            req = self.slot_req[slot]
+            self.slot_pos[slot] += 1
+            if self.slot_prompt_left[slot] > 1:
+                # still prefilling: feed the next prompt token, drop logits
+                self.slot_prompt_left[slot] -= 1
+                idx = len(req.prompt) - int(self.slot_prompt_left[slot])
+                self.slot_tok[slot, 0] = req.prompt[idx]
+                continue
+            self.slot_prompt_left[slot] = 0
+            nxt = int(np.argmax(logits[slot]))
+            req.output.append(nxt)
+            self.slot_tok[slot, 0] = nxt
+            done = (len(req.output) >= req.max_new_tokens
+                    or (self.ecfg.eos_id is not None
+                        and nxt == self.ecfg.eos_id)
+                    or self.slot_pos[slot] >= self.ecfg.kv_capacity - 1)
+            if done:
+                req.done_at = now
+                self.finished.append(req)
+                self.slot_req[slot] = None
+                self.slot_pos[slot] = 0
+        return len(active)
+
+    def drain(self, max_steps: int = 100_000) -> None:
+        while self.waiting or any(r is not None for r in self.slot_req):
+            self.step()
+            max_steps -= 1
+            if max_steps <= 0:
+                raise RuntimeError("engine did not drain")
+
+    @property
+    def active_slots(self) -> int:
+        return sum(r is not None for r in self.slot_req)

@@ -1,0 +1,60 @@
+"""Activation-sharding context: logical `with_sharding_constraint` helpers.
+
+Model code calls `constrain(x, "dp", None, "tp")` with *logical* axes; the
+launcher installs the mesh via `activation_mesh(mesh)`.  Without an installed
+mesh (unit tests, single-device runs) constraints are no-ops, so layer code
+stays mesh-agnostic.  Dims that don't divide their mapped axes fall back to
+replicated — same policy as the parameter rules.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _resolve(mesh: Mesh, logical, shape) -> P:
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    mapping = {"dp": dp, "tp": ("model",) if "model" in names else ()}
+    out = []
+    used: set = set()
+    for dim, logi in zip(shape, logical):
+        axes = mapping.get(logi, ()) if logi else ()
+        axes = tuple(a for a in axes if a not in used)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if not axes or size == 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical):
+    """Apply a logical activation-sharding constraint (no-op without a mesh)."""
+    if _MESH is None or _MESH.size == 1:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = _resolve(_MESH, logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

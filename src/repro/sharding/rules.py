@@ -1,0 +1,212 @@
+"""Rule-based parameter/activation sharding with divisibility fallback.
+
+Logical axes:
+  fsdp -> the data-parallel mesh axes (("pod","data") / ("data",)) — FSDP
+          weight sharding + ZeRO optimizer-state sharding.
+  tp   -> the model axis — tensor/expert parallelism.
+
+A dim whose size does not divide the mapped mesh axes is replicated instead
+(e.g. 8 KV heads on a 16-way model axis).  Rules are keyed on (leaf name,
+rank); params stacked with a leading scan-repeat dim get None prepended
+automatically.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (name, rank) -> logical spec (per unstacked shape)
+_PARAM_RULES: dict[tuple[str, int], tuple] = {
+    ("embed", 2): ("tp", "fsdp"),
+    ("lm_head", 2): ("fsdp", "tp"),
+    ("scale", 1): (None,),
+    # attention
+    ("w_q", 2): ("fsdp", "tp"),
+    ("w_k", 2): ("fsdp", "tp"),
+    ("w_v", 2): ("fsdp", "tp"),
+    ("w_o", 2): ("tp", "fsdp"),
+    # MLA
+    ("w_dkv", 2): ("fsdp", None),
+    ("w_kr", 2): ("fsdp", None),
+    ("w_uk", 2): ("fsdp", "tp"),
+    ("w_uv", 2): ("fsdp", "tp"),
+    # dense ffn
+    ("w_gate", 2): ("fsdp", "tp"),
+    ("w_up", 2): ("fsdp", "tp"),
+    ("w_down", 2): ("tp", "fsdp"),
+    # moe (experts over tp, fsdp within the expert)
+    ("router", 2): ("fsdp", None),
+    ("w_gate", 3): ("tp", "fsdp", None),
+    ("w_up", 3): ("tp", "fsdp", None),
+    ("w_down", 3): ("tp", "fsdp", None),
+    # mamba
+    ("in_proj", 2): ("fsdp", "tp"),
+    ("conv_w", 2): (None, "tp"),
+    ("conv_b", 1): ("tp",),
+    ("x_proj", 2): ("tp", None),
+    ("dt_proj", 2): (None, "tp"),
+    ("dt_bias", 1): ("tp",),
+    ("A_log", 2): ("tp", None),
+    ("D", 1): ("tp",),
+    ("out_proj", 2): ("tp", "fsdp"),
+    # mlstm
+    ("up_proj", 2): ("fsdp", "tp"),
+    ("down_proj", 2): ("tp", "fsdp"),
+    ("w_i", 2): ("fsdp", None),
+    ("w_f", 2): ("fsdp", None),
+    ("b_i", 1): (None,),
+    ("b_f", 1): (None,),
+    ("gn_scale", 1): ("tp",),
+}
+
+# decode-cache leaves: (name, rank) -> logical spec including the leading R dim
+# seq-dim sharding is decided dynamically (see cache_sharding).
+_CACHE_SEQ_LEAVES = {"k", "v", "ckv", "kr", "xk", "xv"}
+_CACHE_RULES: dict[tuple[str, int], tuple] = {
+    ("h", 4): (None, "dp", "tp", None),          # mamba state (R,B,di,N)
+    ("conv", 4): (None, "dp", None, "tp"),       # conv buffer (R,B,dc-1,di)
+    ("C", 5): (None, "dp", None, "tp", None),    # mlstm matrix (R,B,H,dh,dh)
+    ("n", 4): (None, "dp", None, "tp"),
+    ("m", 3): (None, "dp", None),
+}
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(mesh, logical: tuple, shape: tuple, *, fsdp_axes, tp_axes) -> P:
+    """Map logical spec -> PartitionSpec with divisibility fallback."""
+    mapping = {"fsdp": fsdp_axes, "tp": tp_axes, "dp": fsdp_axes}
+    out = []
+    used: set = set()
+    for dim, logi in zip(shape, logical):
+        axes = mapping.get(logi) if logi else None
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        axes_t = tuple(a for a in axes_t if a not in used)
+        if not axes_t or dim % _axes_size(mesh, axes_t) != 0:
+            out.append(None)
+            continue
+        used.update(axes_t)
+        out.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+    return P(*out)
+
+
+def param_sharding(mesh, params, *, mode: str = "train"):
+    """Sharding tree for a param pytree.  mode: 'train' (FSDP×TP) or
+    'serve' (TP only + replication — decode avoids per-step weight gathers
+    unless the model cannot fit, see serve_big)."""
+    from repro.launch.mesh import dp_axes
+    fsdp = dp_axes(mesh) if mode in ("train", "serve_big") else ()
+    tp = ("model",)
+
+    def leaf_sharding(path, leaf):
+        name = _leaf_name(path)
+        # params under a scanned stack ("blocks"/"enc_blocks") carry a leading
+        # repeat dim; look the rule up at the *unstacked* rank (a stacked dense
+        # (R,d,ff) must not match the MoE (E,d,ff) rule).
+        stacked = any(getattr(e, "key", None) in ("blocks", "enc_blocks")
+                      for e in path)
+        rank = leaf.ndim - (1 if stacked else 0)
+        rule = _PARAM_RULES.get((name, rank))
+        if rule is None:
+            return NamedSharding(mesh, P())
+        logical = ((None,) + rule) if stacked else rule
+        spec = resolve_spec(mesh, logical, leaf.shape,
+                            fsdp_axes=fsdp or None, tp_axes=tp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, params)
+
+
+def batch_sharding(mesh, batch):
+    """Data inputs: batch dim over (pod, data)."""
+    from repro.launch.mesh import dp_axes
+    dp = dp_axes(mesh)
+    dp_spec = dp[0] if len(dp) == 1 else dp
+
+    def leaf(path, x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if x.shape[0] % _axes_size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp_spec, *(None,) * (x.ndim - 1)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def cache_sharding(mesh, cache, *, seq_shard_axis: str | None = None):
+    """Decode-cache sharding.  KV-type leaves (R,B,S,...): batch over dp when
+    divisible; when batch cannot shard (e.g. long_500k B=1) the sequence dim
+    shards over dp instead.  seq_shard_axis optionally forces additional seq
+    sharding over the model axis (sequence-parallel decode, §Perf)."""
+    from repro.launch.mesh import dp_axes
+    dp = dp_axes(mesh)
+    dp_size = _axes_size(mesh, dp)
+    dp_spec = dp[0] if len(dp) == 1 else dp
+
+    def leaf(path, x):
+        name = _leaf_name(path)
+        if (name, x.ndim) in _CACHE_RULES:
+            spec = resolve_spec(mesh, _CACHE_RULES[(name, x.ndim)], x.shape,
+                                fsdp_axes=dp, tp_axes=("model",))
+            return NamedSharding(mesh, spec)
+        if name in _CACHE_SEQ_LEAVES:
+            R, B, S = x.shape[0], x.shape[1], x.shape[2]
+            parts = [None, None, None] + [None] * (x.ndim - 3)
+            if B % dp_size == 0:
+                parts[1] = dp_spec
+            elif S % dp_size == 0:
+                parts[2] = dp_spec
+            # kv-head dim over model; when the heads don't divide (GQA with
+            # few KV heads) shard the sequence dim over model instead — the
+            # cache is by far the largest serving tensor.
+            tp_size = mesh.shape.get("model", 1)
+            if x.ndim >= 4 and x.shape[3] % tp_size == 0 and tp_size > 1:
+                parts[3] = "model"
+            elif parts[2] is None and S % tp_size == 0 and tp_size > 1:
+                parts[2] = "model"
+            return NamedSharding(mesh, P(*parts))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def opt_state_sharding(mesh, params_sharding, opt_state):
+    """Moments inherit parameter sharding; scalars replicated."""
+    def match(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return None
+    flat_p = {_path_str(p): s for p, s in
+              jax.tree_util.tree_flatten_with_path(params_sharding)[0]}
+
+    def leaf(path, x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        # opt-state paths look like ("m", <param path...>) — strip the head
+        sub = _path_str(path[1:])
+        if sub in flat_p:
+            return flat_p[sub]
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, opt_state)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)

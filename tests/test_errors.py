@@ -1,0 +1,56 @@
+"""Mixed error handling: taxonomy, graceful exit (real signals), policy."""
+import os
+import signal
+
+import numpy as np
+
+from repro.core.errors import (ERROR_MIX, Action, ErrorKind, GracefulExit,
+                               MixedErrorHandler, sample_error)
+from repro.core.protection import KernelThrottle
+
+
+def test_error_mix_matches_paper():
+    sig = ERROR_MIX[ErrorKind.SIGINT] + ERROR_MIX[ErrorKind.SIGTERM]
+    assert sig / sum(ERROR_MIX.values()) >= 0.985   # "99% ... SIGINT/SIGTERM"
+
+
+def test_signals_graceful_never_propagate():
+    h = MixedErrorHandler(graceful_enabled=True)
+    for k in (ErrorKind.SIGINT, ErrorKind.SIGTERM):
+        out = h.handle(k)
+        assert out.action == Action.GRACEFUL_EXIT and not out.propagated
+
+
+def test_without_mechanism_signals_propagate():
+    h = MixedErrorHandler(graceful_enabled=False)
+    assert h.handle(ErrorKind.SIGINT).propagated
+
+
+def test_tail_errors_reset_context():
+    h = MixedErrorHandler()
+    out = h.handle(ErrorKind.XID31_PAGE_FAULT)
+    assert out.action == Action.RESET_CONTEXT and not out.propagated
+
+
+def test_sample_error_distribution():
+    rng = np.random.default_rng(0)
+    kinds = [sample_error(rng) for _ in range(4000)]
+    frac_sig = sum(k in (ErrorKind.SIGINT, ErrorKind.SIGTERM) for k in kinds) / 4000
+    assert frac_sig > 0.97
+
+
+def test_graceful_exit_intercepts_sigterm():
+    events = []
+    throttle = KernelThrottle()
+    gex = GracefulExit(throttle=throttle,
+                       on_checkpoint=lambda: events.append("ckpt"),
+                       on_release=lambda: events.append("release"))
+    with gex:
+        os.kill(os.getpid(), signal.SIGTERM)
+        # handler runs synchronously in the main thread
+        assert gex.triggered == ErrorKind.SIGTERM
+    assert events == ["ckpt", "release"]
+    assert throttle.frozen                      # kernel launches frozen
+    assert not throttle.should_launch(1.0)
+    # handler restored afterwards
+    assert signal.getsignal(signal.SIGTERM) not in (gex._handler,)

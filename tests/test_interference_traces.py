@@ -1,0 +1,85 @@
+"""Property tests: interference-model invariants, trace determinism,
+dynamic-SM quantization, report generation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dynamic_sm import dynamic_sm
+from repro.core.interference import (OFFLINE_MODEL_PROFILES, online_profile,
+                                     qps_to_activity, shared_performance)
+from repro.core.traces import OnlineQPS, make_trace, philly_like_trace
+
+svc = st.sampled_from(["recommend", "translate", "vision"])
+offm = st.sampled_from(list(OFFLINE_MODEL_PROFILES))
+
+
+@settings(max_examples=150, deadline=None)
+@given(svc, st.floats(0.0, 250.0), offm, st.floats(0.0, 1.0))
+def test_shared_performance_invariants(service, qps, model, sm):
+    on = online_profile(service, qps)
+    off = OFFLINE_MODEL_PROFILES[model]
+    slow, tput = shared_performance(on, off, sm)
+    assert slow >= 1.0                      # sharing never speeds online up
+    assert 0.0 <= tput <= 1.0               # normalized throughput
+    # zero share => no offline progress, (almost) no online impact
+    slow0, tput0 = shared_performance(on, off, 0.0)
+    assert tput0 == 0.0
+    assert slow0 <= 1.05
+
+
+@settings(max_examples=80, deadline=None)
+@given(svc, st.floats(5.0, 60.0), offm,
+       st.floats(0.1, 0.5), st.floats(0.5, 0.9))
+def test_more_sm_more_offline_tput_when_online_idle(service, qps, model,
+                                                    lo, hi):
+    """With a lightly-loaded online partner, offline tput is monotone in the
+    SM share (no contention regime)."""
+    on = online_profile(service, qps)
+    off = OFFLINE_MODEL_PROFILES[model]
+    _, t_lo = shared_performance(on, off, lo)
+    _, t_hi = shared_performance(on, off, hi)
+    assert t_hi >= t_lo - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0, 500), st.floats(10, 500), st.floats(0.05, 1.0))
+def test_qps_activity_saturates(qps, cap, peak):
+    a = qps_to_activity(qps, cap, peak)
+    assert 0.0 <= a <= peak + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0, 1))
+def test_dynamic_sm_bounds_and_quantization(a_on):
+    s = dynamic_sm(a_on)
+    assert 0.1 <= s <= 0.9
+    assert abs(s / 0.1 - round(s / 0.1)) < 1e-9     # 10% MPS steps
+
+
+def test_online_qps_deterministic_and_in_range():
+    rng = np.random.default_rng(7)
+    q = OnlineQPS(rng)
+    vals = [q.qps(t) for t in np.linspace(0, 86400, 200)]
+    q2 = OnlineQPS(np.random.default_rng(7))
+    vals2 = [q2.qps(t) for t in np.linspace(0, 86400, 200)]
+    assert vals == vals2
+    assert min(vals) >= 20.0 and max(vals) <= 190.0 * 1.3
+
+
+def test_trace_generation_properties():
+    jobs = make_trace("B", n_devices=100, horizon_s=12 * 3600.0)
+    assert len(jobs) > 100
+    subs = [j.submit_s for j in jobs]
+    assert subs == sorted(subs)
+    assert all(600.0 <= j.duration_s <= 8 * 3600.0 for j in jobs)
+    # trace load factors ordered A < B < C < D
+    sizes = [len(make_trace(t, 100, 12 * 3600.0)) for t in "ABCD"]
+    assert sizes == sorted(sizes)
+
+
+def test_report_renders():
+    from repro.launch import report
+    txt = report.dryrun_section("16x16")
+    assert "| arch |" in txt
+    roof = report.roofline_section()
+    assert "dominant" in roof and "train_4k" in roof

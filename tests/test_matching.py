@@ -1,0 +1,68 @@
+"""KM matching: exactness vs brute force + scipy, validity properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matching import brute_force_match, km_match, matching_weight
+
+try:
+    from scipy.optimize import linear_sum_assignment
+    HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    HAVE_SCIPY = False
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 10_000))
+def test_km_optimal_vs_brute_force(n, m, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0, 1, (n, m))
+    pairs = km_match(w)
+    got = matching_weight(w, pairs)
+    want = brute_force_match(w)
+    assert got == pytest.approx(want, rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 10_000))
+def test_km_matching_is_valid(n, m, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0, 1, (n, m))
+    pairs = km_match(w)
+    rows = [r for r, _ in pairs]
+    cols = [c for _, c in pairs]
+    assert len(set(rows)) == len(rows), "row matched twice"
+    assert len(set(cols)) == len(cols), "col matched twice"
+    assert all(0 <= r < n and 0 <= c < m for r, c in pairs)
+    assert all(w[r, c] > 0 for r, c in pairs)
+
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy unavailable")
+@pytest.mark.parametrize("seed", range(5))
+def test_km_matches_scipy(seed):
+    rng = np.random.default_rng(seed)
+    n, m = rng.integers(5, 60), rng.integers(5, 60)
+    w = rng.uniform(0.01, 1, (n, m))
+    got = matching_weight(w, km_match(w))
+    # scipy maximizes on the padded square the same way
+    k = max(n, m)
+    pad = np.zeros((k, k))
+    pad[:n, :m] = w
+    ri, ci = linear_sum_assignment(pad, maximize=True)
+    want = pad[ri, ci].sum()
+    assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_km_zero_and_empty():
+    assert km_match(np.zeros((3, 4))) == []
+    assert km_match(np.zeros((0, 0))) == []
+
+
+def test_km_prefers_heavier_plan_paper_example():
+    # Figure 9: plan1 (A-D, B-C) = 1.6 beats plan2 (A-C, B-E) = 0.7
+    #    C    D    E
+    w = np.array([[0.3, 0.8, 0.1],   # A
+                  [0.8, 0.1, 0.4]])  # B
+    pairs = km_match(w)
+    assert matching_weight(w, pairs) == pytest.approx(1.6)
+    assert set(pairs) == {(0, 1), (1, 0)}

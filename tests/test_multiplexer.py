@@ -1,0 +1,62 @@
+"""On-device multiplexer: SLO protection, quota, graceful exit, eviction."""
+import numpy as np
+import pytest
+
+from repro.core.multiplexer import Multiplexer, MuxConfig
+from repro.core.protection import QuotaExceeded
+
+
+def make_mux(slo=1.2, couple=0.35, base=0.010, off=0.020, **kw):
+    mux_holder = {}
+
+    def online_fn(bs):
+        duty = mux_holder["m"].throttle.duty
+        return base * (1.0 + couple * duty)
+
+    m = Multiplexer(online_fn, lambda: off, base, off, MuxConfig(slo_slowdown=slo, **kw))
+    mux_holder["m"] = m
+    return m
+
+
+def arrivals(qps, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, n)).tolist()
+
+
+def test_slo_respected_under_load():
+    m = make_mux(slo=1.2, couple=0.5)
+    s = m.run(arrivals(40, 600), 20.0)
+    assert s.served == 600
+    # average online step slowdown stays near the SLO bound
+    assert s.p50_ms <= 1.35 * s.base_ms * 2   # incl. queueing slack
+    assert s.offline_steps > 0
+    assert 0.0 < s.offline_duty < 1.0
+
+
+def test_more_load_less_offline():
+    lo = make_mux().run(arrivals(10, 100), 12.0)
+    hi = make_mux().run(arrivals(90, 1080), 12.0)
+    assert lo.oversold > hi.oversold
+
+
+def test_quota_rejects_oversized_offline():
+    with pytest.raises(QuotaExceeded):
+        Multiplexer(lambda b: 0.01, lambda: 0.02, 0.01, 0.02,
+                    MuxConfig(device_bytes=1000, quota_frac=0.4),
+                    offline_state_bytes=500)
+
+
+def test_offline_only_runs_when_idle_budget_allows():
+    # zero arrivals: offline free-runs at the PID's initial duty
+    m = make_mux()
+    s = m.run([], 5.0, max_offline_steps=10)
+    assert s.offline_steps == 10
+    assert s.served == 0
+
+
+def test_eviction_on_persistent_violation():
+    # online step always 5x base: PID can't save it -> SysMonitor-style evict
+    m = Multiplexer(lambda b: 0.05, lambda: 0.02, 0.01, 0.02,
+                    MuxConfig(slo_slowdown=1.2, evict_after_violations=10))
+    s = m.run(arrivals(50, 300), 10.0)
+    assert s.evicted

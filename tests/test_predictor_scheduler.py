@@ -1,0 +1,88 @@
+"""Speed predictor accuracy + Algorithm-1 scheduler behaviour."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dynamic_sm import dynamic_sm, fixed_sm
+from repro.core.interference import (OFFLINE_MODEL_PROFILES, online_profile,
+                                     shared_performance)
+from repro.core.predictor import (SpeedPredictor, make_dataset, mlp_apply,
+                                  mlp_init, pair_features, train_predictor)
+from repro.core.scheduler import OfflineJob, OnlineSlot, SchedulerConfig, schedule
+
+
+@pytest.fixture(scope="module")
+def trained():
+    rng = np.random.default_rng(0)
+    feats, targets = make_dataset(rng, n=1200)
+    params, hist = train_predictor(jax.random.PRNGKey(0), feats, targets,
+                                   epochs=60)
+    return params, hist
+
+
+def test_predictor_learns(trained):
+    params, hist = trained
+    assert hist["val_mae"][-1] < 0.06           # within a few % throughput
+    assert hist["val_mae"][-1] < hist["val_mae"][0] * 0.5
+
+
+def test_predictor_monotone_in_sm_share(trained):
+    """More SMs for the offline workload => no lower predicted tput (holds
+    for an uncontended online partner)."""
+    params, _ = trained
+    on = online_profile("recommend", 30.0)
+    off = OFFLINE_MODEL_PROFILES["ResNet50"]
+    preds = [float(mlp_apply(params, pair_features(on, off, s)))
+             for s in (0.1, 0.3, 0.5, 0.7, 0.9)]
+    assert preds[-1] > preds[0]
+
+
+def test_dynamic_sm_complementary():
+    assert dynamic_sm(0.2) >= dynamic_sm(0.8)
+    assert 0.1 <= dynamic_sm(0.0) <= 0.9
+    assert 0.1 <= dynamic_sm(1.0) <= 0.9
+    assert dynamic_sm(0.15, step=0.1) == pytest.approx(0.8)
+    assert fixed_sm() == 0.4
+
+
+def test_scheduler_prefers_good_pairs(trained):
+    params, _ = trained
+    pred = SpeedPredictor({"T4": params})
+    # one lightly-loaded and one heavily-loaded online device
+    light = OnlineSlot(0, "T4", online_profile("recommend", 15.0))
+    heavy = OnlineSlot(1, "T4", online_profile("vision", 190.0))
+    job = OfflineJob(7, OFFLINE_MODEL_PROFILES["VGG16"], 3600.0)
+    out = schedule([light, heavy], [job], pred)
+    assert len(out) == 1
+    assert out[0].device_id == 0                 # matches the idle device
+    assert out[0].job_id == 7
+    assert 0.1 <= out[0].sm_share <= 0.9
+
+
+def test_scheduler_matching_beats_fifo(trained):
+    params, _ = trained
+    pred = SpeedPredictor({"T4": params})
+    rng = np.random.default_rng(1)
+    slots = [OnlineSlot(i, "T4", online_profile("translate", float(q)))
+             for i, q in enumerate(rng.uniform(10, 190, 8))]
+    jobs = [OfflineJob(j, OFFLINE_MODEL_PROFILES[m], 3600.0)
+            for j, m in enumerate(rng.choice(list(OFFLINE_MODEL_PROFILES), 8))]
+    km = schedule(slots, jobs, pred, SchedulerConfig(use_matching=True))
+    fifo = schedule(slots, jobs, pred, SchedulerConfig(use_matching=False))
+    assert sum(a.predicted_tput for a in km) >= sum(a.predicted_tput for a in fifo) - 1e-9
+
+
+def test_interference_matches_fig4():
+    """Fig 4(a): a tuned share yields >= 0.6 offline tput at < 1.2x online
+    slowdown; Fig 4(b): the share sweep moves offline perf > 5x."""
+    on = online_profile("vision", 100.0)
+    off = OFFLINE_MODEL_PROFILES["VGG16"]
+    best = 0.0
+    for s in np.linspace(0.1, 0.9, 9):
+        slow, tput = shared_performance(on, off, float(s))
+        if slow <= 1.2:
+            best = max(best, tput)
+    assert best >= 0.55
+    t10 = shared_performance(on, off, 0.1)[1]
+    t90 = shared_performance(on, off, 0.9)[1]
+    assert t90 / max(t10, 1e-9) > 5.0

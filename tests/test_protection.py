@@ -1,0 +1,92 @@
+"""xCUDA analogue: GPU-load law (Eq. 1–2), PID stability, quota ledger."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.protection import (ClockFactorConfig, KernelThrottle,
+                                   MemoryQuota, PIDConfig, PIDController,
+                                   QuotaExceeded, clock_factor, gpu_load)
+
+
+def test_clock_factor_piecewise():
+    cfg = ClockFactorConfig(t_sm=1350, c_high=1590, a_l=4.0, a_h=0.5)
+    # at threshold: a_C = 1 both sides (Eq. 2 is continuous)
+    assert clock_factor(1350.0, cfg) == pytest.approx(1.0)
+    # below threshold: boost, slope a_L
+    assert clock_factor(675.0, cfg) == pytest.approx(1 + 4.0 * 0.5)
+    # above: damp, slope a_H
+    assert clock_factor(1590.0, cfg) == pytest.approx(1 - 0.5)
+    # a_L >> a_H: the low-clock response dominates
+    assert (clock_factor(1250.0, cfg) - 1) > (1 - clock_factor(1450.0, cfg))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0, 1), st.floats(700, 1600))
+def test_gpu_load_monotone_in_usm(u_sm, c_sm):
+    a = clock_factor(c_sm)
+    assert gpu_load(u_sm, a) == pytest.approx(u_sm * a)
+    assert gpu_load(u_sm, a) >= 0
+
+
+def test_pid_converges_to_setpoint():
+    """Closed loop: measured load = 0.2 + 0.8 * duty.  PID must settle the
+    duty so the load tracks the 0.85 setpoint."""
+    pid = PIDController(PIDConfig(setpoint=0.85), initial=0.1)
+    duty = 0.1
+    for _ in range(200):
+        load = 0.2 + 0.8 * duty
+        duty = pid.update(load, dt=1.0)
+    assert 0.2 + 0.8 * duty == pytest.approx(0.85, abs=0.02)
+
+
+def test_pid_output_bounded():
+    pid = PIDController(PIDConfig(setpoint=0.5, out_min=0.0, out_max=1.0))
+    for load in [0.0, 2.0, -1.0, 5.0, 0.0, 0.0]:
+        out = pid.update(load)
+        assert 0.0 <= out <= 1.0
+
+
+def test_quota_enforced():
+    q = MemoryQuota(device_bytes=100, quota_frac=0.4)
+    h = q.alloc(30)
+    assert q.used == 30
+    with pytest.raises(QuotaExceeded):
+        q.alloc(11)
+    q.free(h)
+    assert q.used == 0
+    q.alloc(40)   # exactly the quota is fine
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 30), min_size=1, max_size=50))
+def test_quota_never_exceeded_property(sizes):
+    q = MemoryQuota(device_bytes=1000, quota_frac=0.4)
+    handles = []
+    for s in sizes:
+        if q.would_fit(s):
+            handles.append(q.alloc(s))
+        else:
+            with pytest.raises(QuotaExceeded):
+                q.alloc(s)
+        assert q.used <= q.quota_bytes
+        if len(handles) > 3:
+            q.free(handles.pop(0))
+            assert q.used >= 0
+
+
+def test_throttle_duty_credit():
+    th = KernelThrottle()
+    th.duty = 0.5
+    launches = sum(th.should_launch(1.0) for _ in range(100))
+    assert 45 <= launches <= 55
+    th.freeze()
+    assert not th.should_launch(1.0)
+
+
+def test_throttle_responds_to_clock_drop():
+    th = KernelThrottle()
+    for _ in range(50):
+        th.observe(u_sm=0.5, c_sm=1500.0)
+    duty_ok = th.duty
+    for _ in range(50):
+        th.observe(u_sm=0.5, c_sm=1000.0)   # depressed clock -> load spikes
+    assert th.duty < duty_ok

@@ -1,0 +1,70 @@
+"""Continuous-batching engine: outputs must equal sequential whole-prompt
+generation, under ragged admission and slot reuse."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import greedy_generate, init_params
+from repro.serving.engine import EngineConfig, ServeRequest, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("h2o-danube-1.8b", smoke=True),
+                              dtype=jnp.float32, window=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def ref_generate(cfg, params, prompt, n_new):
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+    toks = greedy_generate(cfg, params, batch, steps=max(n_new - 1, 0))
+    return [int(t) for t in np.asarray(toks[0])][:n_new]
+
+
+def test_single_request_matches_sequential(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    eng = ServingEngine(cfg, params, EngineConfig(num_slots=4, kv_capacity=64))
+    eng.submit(ServeRequest(0, prompt, max_new_tokens=6))
+    eng.drain()
+    assert len(eng.finished) == 1
+    want = ref_generate(cfg, params, prompt, 6)
+    assert eng.finished[0].output == want
+
+
+def test_ragged_batch_matches_sequential(setup):
+    """Multiple requests with different prompt lengths admitted together —
+    per-slot positions keep every sequence independent."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size,
+                                         int(rng.integers(2, 9))).astype(np.int32),
+                         max_new_tokens=int(rng.integers(2, 6)))
+            for i in range(6)]
+    eng = ServingEngine(cfg, params, EngineConfig(num_slots=3, kv_capacity=64))
+    for r in reqs:
+        eng.submit(r)
+    eng.drain()
+    assert len(eng.finished) == 6
+    for r in reqs:
+        want = ref_generate(cfg, params, r.prompt, r.max_new_tokens)
+        assert r.output == want, f"request {r.request_id}"
+
+
+def test_slot_reuse_and_fixed_shape(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    eng = ServingEngine(cfg, params, EngineConfig(num_slots=2, kv_capacity=64))
+    for i in range(5):
+        eng.submit(ServeRequest(i, rng.integers(0, cfg.vocab_size, 3)
+                                .astype(np.int32), max_new_tokens=3))
+    eng.drain()
+    assert len(eng.finished) == 5
+    # one compiled program: decode was jitted once; steps bounded
+    assert eng.steps < 5 * (3 + 3) + 10

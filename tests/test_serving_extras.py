@@ -1,0 +1,69 @@
+"""KV-cache quantization accuracy + autoscaler behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.kernels import ref
+from repro.serving.kv_quant import (decode_attention_quantized, kv_dequantize,
+                                    kv_quantize, quantized_cache_bytes)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 64), st.integers(1, 4),
+       st.integers(0, 100))
+def test_kv_quant_roundtrip_error(B, S, H, seed):
+    kv = jax.random.normal(jax.random.PRNGKey(seed), (B, S, H, 16)) * 3.0
+    q, scale = kv_quantize(kv)
+    back = kv_dequantize(q, scale)
+    err = float(jnp.abs(back - kv).max())
+    assert err <= float(jnp.abs(kv).max()) / 127.0 + 1e-6   # <= 1 quantum
+
+
+def test_quantized_decode_attention_close_to_fp():
+    key = jax.random.PRNGKey(0)
+    B, S, H, Hk, d = 2, 128, 8, 2, 64
+    q = jax.random.normal(key, (B, 1, H, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hk, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hk, d))
+    kq, ks = kv_quantize(k)
+    vq, vs = kv_quantize(v)
+    out = decode_attention_quantized(q, kq, ks, vq, vs, kv_len=100)
+    want = ref.decode_attention_reference(q, k, v, kv_len=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_quantized_cache_bytes_halve_bf16():
+    full_bf16 = 2 * 128 * 32768 * 8 * 128 * 2
+    quant = quantized_cache_bytes(128, 32768, 8, 128) * 2
+    assert quant < full_bf16 * 0.55
+
+
+def test_autoscaler_scales_up_on_load():
+    a = Autoscaler(AutoscalerConfig(cooldown_s=0.0), replicas=2,
+                   qps_capacity_per_replica=100.0)
+    d = a.observe(total_qps=200.0, now=0.0)      # load 1.0 > 0.8
+    assert d is not None and d.delta > 0
+    # sized to target: 200 / (100*0.6) = 3.34 -> 4
+    assert a.replicas == 4
+
+
+def test_autoscaler_scale_down_needs_stability_and_respects_min():
+    cfg = AutoscalerConfig(cooldown_s=0.0, scale_down_stability_s=100.0,
+                           min_replicas=1)
+    a = Autoscaler(cfg, replicas=8, qps_capacity_per_replica=100.0)
+    assert a.observe(total_qps=50.0, now=0.0) is None      # starts the clock
+    assert a.observe(total_qps=50.0, now=50.0) is None     # not stable yet
+    d = a.observe(total_qps=50.0, now=150.0)
+    assert d is not None and d.delta < 0 and a.replicas == 1
+
+
+def test_autoscaler_cooldown():
+    a = Autoscaler(AutoscalerConfig(cooldown_s=300.0), replicas=1,
+                   qps_capacity_per_replica=100.0)
+    assert a.observe(900.0, now=0.0).replicas > 1
+    assert a.observe(9000.0, now=10.0) is None             # in cooldown
+    assert a.observe(9000.0, now=400.0) is not None

@@ -1,0 +1,102 @@
+"""SysMonitor state machine: transitions, eviction, exponential re-admission."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.protection import DeviceTelemetry
+from repro.core.sysmonitor import GPUState, SysMonitor
+
+
+def tele(t, util=0.3, sm=0.2, clock=1500.0, mem=0.4, temp=60.0):
+    return DeviceTelemetry(ts=t, gpu_util=util, sm_activity=sm, sm_clock=clock,
+                           mem_used_frac=mem, temp_c=temp)
+
+
+def warmed(now=10.0):
+    m = SysMonitor(now=0.0)
+    m.update(tele(now), now)
+    assert m.state == GPUState.HEALTHY
+    return m
+
+
+def test_init_to_healthy():
+    m = SysMonitor(now=0.0)
+    s, ev = m.update(tele(1.0), 1.0)
+    assert s == GPUState.INIT
+    s, ev = m.update(tele(6.0), 6.0)
+    assert s == GPUState.HEALTHY and "schedulable" in ev
+
+
+def test_unhealthy_and_back():
+    m = warmed()
+    s, ev = m.update(tele(11, util=0.95), 11)
+    assert s == GPUState.UNHEALTHY and "unschedulable" in ev
+    assert not m.schedulable
+    s, ev = m.update(tele(12), 12)
+    assert s == GPUState.HEALTHY and m.schedulable
+
+
+def test_overlimit_evicts_and_backs_off():
+    m = warmed()
+    s, ev = m.update(tele(11, mem=0.99), 11)
+    assert s == GPUState.OVERLIMIT and "evict" in ev
+    # healthy metrics but must wait the re-admission period
+    s, _ = m.update(tele(12), 12)
+    assert s == GPUState.OVERLIMIT
+    s, _ = m.update(tele(12 + 61), 12 + 61)
+    assert s == GPUState.UNHEALTHY
+    s, _ = m.update(tele(12 + 62), 12 + 62)
+    assert s == GPUState.HEALTHY
+
+
+def test_readmission_grows_exponentially():
+    m = warmed()
+    t = 11.0
+    waits = []
+    for _ in range(3):
+        m.update(tele(t, mem=0.99), t)
+        assert m.state == GPUState.OVERLIMIT
+        t += 1
+        t0 = t
+        while m.state == GPUState.OVERLIMIT and t - t0 < 10_000:
+            m.update(tele(t), t)
+            t += 5
+        waits.append(t - t0)
+        m.update(tele(t), t)       # back to healthy
+        t += 1
+    assert waits[1] > waits[0] and waits[2] > waits[1]
+
+
+def test_healthy_to_overlimit_direct():
+    m = warmed()
+    s, ev = m.update(tele(11, clock=800.0), 11)
+    assert s == GPUState.OVERLIMIT and "evict" in ev
+
+
+def test_disabled_is_terminal():
+    m = warmed()
+    m.disable()
+    s, _ = m.update(tele(20), 20)
+    assert s == GPUState.DISABLED and not m.schedulable
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0, 1),
+                          st.floats(700, 1600), st.floats(0, 1)),
+                min_size=1, max_size=40))
+def test_invariants_random_walk(samples):
+    """Whatever the telemetry, (a) schedulable only in HEALTHY, (b) every
+    OVERLIMIT entry emits exactly one evict event."""
+    m = SysMonitor(now=0.0)
+    m.update(tele(10.0), 10.0)
+    t = 11.0
+    evicts = 0
+    entries = 0
+    prev = m.state
+    for util, sm, clock, mem in samples:
+        s, ev = m.update(tele(t, util=util, sm=sm, clock=clock, mem=mem), t)
+        evicts += ev.count("evict")
+        if s == GPUState.OVERLIMIT and prev != GPUState.OVERLIMIT:
+            entries += 1
+        assert m.schedulable == (s == GPUState.HEALTHY)
+        prev = s
+        t += 1.0
+    assert evicts == entries
