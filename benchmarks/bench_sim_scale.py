@@ -1,0 +1,120 @@
+"""Paper-scale simulator benchmark: vectorized-engine throughput across
+cluster sizes and policies (MuxFlow deploys on > 20 000 GPUs — §7/§8).
+
+Per (n_devices, policy) cell this reports wall time, simulated ticks/second,
+and schedule-round latency (mean/max), plus headline sim metrics as a sanity
+check.  Emits the suite's usual ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python benchmarks/bench_sim_scale.py                # full sweep
+  PYTHONPATH=src python benchmarks/bench_sim_scale.py --smoke        # tiny CI config
+  PYTHONPATH=src python benchmarks/bench_sim_scale.py \
+      --devices 200,2000,20000 --policies muxflow,online-only \
+      --trace A --horizon-h 12 --tick 30
+
+Acceptance targets (ISSUE 1): a 20 000-device, 12-hour, 30 s-tick MuxFlow
+run completes in < 5 minutes on CPU; a schedule round at 20k completes in
+< 10 s.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core.simulator import POLICIES, ClusterSim, SimConfig
+
+try:
+    from .bench_lib import emit
+except ImportError:  # running as a script: python benchmarks/bench_sim_scale.py
+    from bench_lib import emit  # type: ignore
+
+
+def _build_predictor(tiny: bool):
+    from repro.core.predictor import build_speed_predictor
+    if tiny:
+        return build_speed_predictor(gpu_types=("T4", "A10"), n=150, epochs=5)
+    return build_speed_predictor(gpu_types=("T4", "A10"), n=600, epochs=30)
+
+
+def bench_cell(policy: str, n_devices: int, predictor, *, horizon_s: float,
+               tick_s: float, trace: str, seed: int = 0) -> dict:
+    cfg = SimConfig(policy=policy, n_devices=n_devices, horizon_s=horizon_s,
+                    tick_s=tick_s, trace=trace, seed=seed)
+    sim = ClusterSim(cfg, predictor if policy.startswith("muxflow") else None)
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    n_ticks = int(horizon_s / tick_s)
+    sl = sim.schedule_latencies or [0.0]
+    return {
+        "wall_s": wall,
+        "ticks_per_s": n_ticks / max(wall, 1e-9),
+        "sched_mean_s": float(np.mean(sl)),
+        "sched_max_s": float(max(sl)),
+        "res": res,
+    }
+
+
+def sweep(devices, policies, *, horizon_s, tick_s, trace, predictor) -> int:
+    failures = 0
+    for n in devices:
+        for pol in policies:
+            c = bench_cell(pol, n, predictor, horizon_s=horizon_s,
+                           tick_s=tick_s, trace=trace)
+            r = c["res"]
+            emit(f"simscale_n{n}_{pol}", c["wall_s"] * 1e6,
+                 f"{c['ticks_per_s']:.1f}ticks/s;sched_mean={c['sched_mean_s']*1e3:.0f}ms;"
+                 f"sched_max={c['sched_max_s']*1e3:.0f}ms;done={r.n_finished}/{r.n_jobs};"
+                 f"slow={r.avg_slowdown:.3f};oversold={r.oversold_gpu:.3f}")
+            if pol == "muxflow" and n >= 20_000:
+                ok_wall = c["wall_s"] < 300.0
+                ok_round = c["sched_max_s"] < 10.0
+                emit(f"simscale_accept_n{n}", 0.0,
+                     f"run<5min:{'PASS' if ok_wall else 'FAIL'};"
+                     f"round<10s:{'PASS' if ok_round else 'FAIL'}")
+                failures += (not ok_wall) + (not ok_round)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", default="200,2000,20000")
+    ap.add_argument("--policies", default="all",
+                    help="'all' or comma-separated subset of " + ",".join(POLICIES))
+    ap.add_argument("--trace", default="A")
+    ap.add_argument("--horizon-h", type=float, default=12.0)
+    ap.add_argument("--tick", type=float, default=30.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 64 devices, 30 min, 2 policies")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        devices = [64]
+        policies = ["muxflow", "online-only"]
+        horizon_s, tick_s = 1800.0, args.tick
+    else:
+        devices = [int(d) for d in args.devices.split(",")]
+        policies = (list(POLICIES) if args.policies == "all"
+                    else args.policies.split(","))
+        horizon_s, tick_s = args.horizon_h * 3600.0, args.tick
+    for p in policies:
+        assert p in POLICIES, p
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    predictor = _build_predictor(tiny=args.smoke)
+    emit("simscale_predictor_train", (time.perf_counter() - t0) * 1e6, "")
+    failures = sweep(devices, policies, horizon_s=horizon_s, tick_s=tick_s,
+                     trace=args.trace, predictor=predictor)
+    return 1 if failures else 0
+
+
+def run() -> None:
+    """Moderate sweep for ``python -m benchmarks.run simscale``."""
+    predictor = _build_predictor(tiny=True)
+    sweep([200, 2000], ["muxflow", "time-sharing", "online-only"],
+          horizon_s=2 * 3600.0, tick_s=30.0, trace="A", predictor=predictor)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ SUITES = [
     ("fig13", "benchmarks.fig13_ablation"),
     ("fig14", "benchmarks.fig14_15_deployment"),
     ("overhead", "benchmarks.overhead_matching"),
+    ("simscale", "benchmarks.bench_sim_scale"),
     ("kernels", "benchmarks.kernel_bench"),
 ]
 

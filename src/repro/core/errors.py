@@ -84,17 +84,25 @@ class MixedErrorHandler:
         return sum(1 for h in self.handled if h.propagated) / len(self.handled)
 
 
-def sample_error(rng) -> ErrorKind:
+def error_from_uniform(u: float) -> ErrorKind:
+    """Map a uniform [0,1) draw to an error kind per the production mix.
+    Split out from :func:`sample_error` so the simulator engines can consume
+    pre-drawn per-tick uniform vectors (keeps both engines on one RNG
+    stream)."""
     kinds = list(ERROR_MIX)
     probs = [ERROR_MIX[k] for k in kinds]
     total = sum(probs)
-    r = rng.random() * total
+    r = u * total
     acc = 0.0
     for k, p in zip(kinds, probs):
         acc += p
         if r <= acc:
             return k
     return kinds[-1]
+
+
+def sample_error(rng) -> ErrorKind:
+    return error_from_uniform(rng.random())
 
 
 class GracefulExit:

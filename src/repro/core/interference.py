@@ -105,6 +105,71 @@ ONLINE_SERVICE_PROFILES = {
 }
 
 
+def online_profile_arrays(service_idx: np.ndarray, qps: np.ndarray,
+                          services: tuple[str, ...]) -> dict[str, np.ndarray]:
+    """Vectorized :func:`online_profile` over a fleet.
+
+    ``service_idx[i]`` indexes into ``services``; returns a dict of per-device
+    arrays with the same fields as :class:`WorkloadProfile`.  The arithmetic
+    mirrors the scalar function operation-for-operation so values agree
+    bitwise with per-device calls.
+    """
+    def const(key):
+        return np.array([ONLINE_SERVICE_PROFILES[s][key] for s in services],
+                        np.float64)[service_idx]
+
+    cap = const("qps_capacity")
+    peak = const("peak_sm")
+    x = qps / cap
+    act = peak * (1.0 - np.exp(-1.6 * (qps / np.maximum(cap, 1e-6))))
+    util = np.clip(0.08 + 0.40 * x, 0.0, 1.0)
+    return {
+        "gpu_util": util,
+        "sm_activity": act,
+        "sm_occupancy": 0.35 + 0.3 * act,
+        "mem_bw": const("mem_bw") * util,
+        "exec_time_ms": const("base_latency_ms"),
+        "mem_bytes_frac": const("mem_bytes_frac"),
+    }
+
+
+def shared_performance_arrays(on: dict[str, np.ndarray],
+                              off: dict[str, np.ndarray],
+                              sm_off: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized :func:`shared_performance`: elementwise over per-device
+    online/offline profile arrays.  Mirrors the scalar operation order."""
+    sm_off = np.clip(sm_off, 0.0, 1.0)
+    a_on = on["sm_activity"]
+    used_off = np.minimum(sm_off, off["sm_activity"])
+    inst_on = np.minimum(1.0, a_on / np.maximum(on["gpu_util"], 0.05))
+    overlap_inst = np.maximum(0.0, inst_on + used_off - 1.0)
+    overlap_avg = overlap_inst * on["gpu_util"]
+    bw_off = off["mem_bw"] * (used_off / np.maximum(off["sm_activity"], 1e-6))
+    bw_over = np.maximum(0.0, on["mem_bw"] * on["gpu_util"] + bw_off - 1.0)
+    online_slowdown = (1.0 + _MPS_OVERHEAD
+                       + _BASE_CONTENTION * used_off ** 1.5
+                       + _SM_CONTENTION * overlap_inst / np.maximum(inst_on, 0.05)
+                       + _BW_CONTENTION * bw_over / np.maximum(on["mem_bw"], 0.05))
+    eff = used_off - 0.5 * overlap_avg
+    tput = eff / np.maximum(off["sm_activity"], 1e-6)
+    tput = tput * (1.0 / (1.0 + _OFF_OVERLAP_SENS * overlap_inst
+                          + _OFF_BW_SENS * bw_over / np.maximum(off["mem_bw"], 0.05)))
+    tput = tput * (1.0 - _MPS_OVERHEAD)
+    return online_slowdown, np.clip(tput, 0.0, 1.0)
+
+
+def offline_profile_arrays(model_idx: np.ndarray,
+                           models: tuple[str, ...]) -> dict[str, np.ndarray]:
+    """Per-device offline profile arrays from a model-index array (devices
+    without a job may carry any index; mask downstream)."""
+    def const(attr):
+        return np.array([getattr(OFFLINE_MODEL_PROFILES[m], attr)
+                         for m in models], np.float64)[model_idx]
+
+    return {k: const(k) for k in ("gpu_util", "sm_activity", "sm_occupancy",
+                                  "mem_bw", "exec_time_ms", "mem_bytes_frac")}
+
+
 def online_profile(service: str, qps: float) -> WorkloadProfile:
     s = ONLINE_SERVICE_PROFILES[service]
     x = qps / s["qps_capacity"]

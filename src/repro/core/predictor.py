@@ -65,6 +65,70 @@ class SpeedPredictor:
         return float(self.predict(gpu_type, pair_features(online, offline, sm_off)))
 
 
+class CachedSpeedPredictor:
+    """Memoizing wrapper around :class:`SpeedPredictor` for the scheduler's
+    repeated rounds.
+
+    With the paper's workloads a feature row is determined by the (online
+    service @ QPS, offline model, SM share) triple, and the same triples
+    recur every scheduling interval.  Rows are quantized to ``quantum`` (the
+    prediction is computed *on the quantized row*, so the cache is
+    self-consistent) and keyed per GPU type; misses are batched into a single
+    inner predictor call.  ``quantum`` trades a tiny prediction perturbation
+    for a cross-round hit rate that grows toward 100 % as the fleet's QPS
+    curves revisit the same buckets.
+    """
+
+    def __init__(self, inner: SpeedPredictor, quantum: float = 0.01,
+                 max_entries: int = 2_000_000):
+        self.inner = inner
+        self.quantum = float(quantum)
+        self.max_entries = max_entries
+        self._cache: dict[tuple[str, bytes], float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def params_by_type(self):
+        return self.inner.params_by_type
+
+    def predict(self, gpu_type: str, feats: np.ndarray) -> np.ndarray:
+        feats = np.asarray(feats, np.float32)
+        squeeze = feats.ndim == 1
+        rows = feats.reshape(-1, feats.shape[-1])
+        if self.quantum > 0:
+            rows = (np.round(rows / self.quantum) * self.quantum).astype(np.float32)
+        out = np.empty(rows.shape[0], np.float32)
+        miss_idx: list[int] = []
+        keys = [(gpu_type, rows[i].tobytes()) for i in range(rows.shape[0])]
+        for i, key in enumerate(keys):
+            val = self._cache.get(key)
+            if val is None:
+                miss_idx.append(i)
+            else:
+                out[i] = val
+        self.hits += rows.shape[0] - len(miss_idx)
+        self.misses += len(miss_idx)
+        if miss_idx:
+            mi = np.asarray(miss_idx)
+            pred = self.inner.predict(gpu_type, rows[mi])
+            out[mi] = pred
+            if len(self._cache) + len(mi) > self.max_entries:
+                self._cache.clear()
+            for i, p in zip(miss_idx, np.asarray(pred, np.float32)):
+                self._cache[keys[i]] = float(p)
+        shaped = out.reshape(feats.shape[:-1])
+        return shaped[()] if squeeze else shaped
+
+    def predict_pair(self, gpu_type: str, online, offline, sm_off) -> float:
+        return float(self.predict(gpu_type,
+                                  pair_features(online, offline, sm_off)))
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
 def make_dataset(rng: np.random.Generator, n: int = 2000,
                  noise: float = 0.02) -> tuple[np.ndarray, np.ndarray]:
     """Synthesize a profiling dataset from the interference model: random

@@ -7,6 +7,15 @@ apply the matching (with move = checkpoint + restart semantics handled by the
 caller/simulator).  Devices whose SysMonitor is not Healthy contribute no
 node — this is also how elasticity works: the graph is simply rebuilt from
 the live device set, so node joins/leaves are absorbed at the next interval.
+
+Paper-scale path: offline jobs carry one of a handful of distinct profiles,
+so the weight matrix has only ``n_slots × n_unique_profiles`` distinct
+entries.  Prediction is batched over that grid (one predictor call per GPU
+type instead of one per pair), and when the bipartite problem exceeds
+``shard_size`` the matcher switches from dense KM to
+:func:`repro.core.matching.sharded_match_compact`, which partitions
+devices/jobs into bounded shards (the paper schedules per cluster partition
+anyway) and prunes near-zero edges — O(shards · s³) instead of O(n³).
 """
 from __future__ import annotations
 
@@ -16,8 +25,8 @@ import numpy as np
 
 from repro.core.dynamic_sm import dynamic_sm, fixed_sm
 from repro.core.interference import WorkloadProfile
-from repro.core.matching import km_match
-from repro.core.predictor import SpeedPredictor, pair_features
+from repro.core.matching import km_match, sharded_match_compact
+from repro.core.predictor import N_FEATURES, SpeedPredictor
 
 
 @dataclasses.dataclass
@@ -49,12 +58,58 @@ class SchedulerConfig:
     use_matching: bool = True       # False => MuxFlow-M ablation (greedy FIFO)
     fixed_sm_share: float = 0.4
     min_weight: float = 0.02        # prune edges below this predicted tput
+    shard_size: int = 256           # partition bound for paper-scale matching
+    row_slack: int = 16             # extra devices kept per shard model group
 
 
 def _sm_share(cfg: SchedulerConfig, online: WorkloadProfile) -> float:
     if cfg.use_dynamic_sm:
         return dynamic_sm(online.sm_activity)
     return fixed_sm(cfg.fixed_sm_share)
+
+
+def build_weight_grid(slots: list[OnlineSlot], jobs: list[OfflineJob],
+                      predictor: SpeedPredictor, cfg: SchedulerConfig,
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched prediction over the (slot × unique offline profile) grid.
+
+    Returns ``(values (n, u), col_group (m,), shares (n,))`` where
+    ``values[i, col_group[j]]`` is the predicted normalized throughput of
+    pairing slot i with job j.  One predictor call per GPU type; cost is
+    O(n · u) instead of O(n · m) — with the paper's four offline models
+    u = 4 regardless of queue depth.
+    """
+    n, m = len(slots), len(jobs)
+    shares = np.array([_sm_share(cfg, s.profile) for s in slots], np.float64)
+    group_of: dict[WorkloadProfile, int] = {}
+    col_group = np.empty(m, np.int64)
+    uniq: list[WorkloadProfile] = []
+    for j, jb in enumerate(jobs):
+        g = group_of.get(jb.profile)
+        if g is None:
+            g = group_of[jb.profile] = len(uniq)
+            uniq.append(jb.profile)
+        col_group[j] = g
+    u = len(uniq)
+    on_feats = np.array([[s.profile.gpu_util, s.profile.sm_activity,
+                          s.profile.sm_occupancy, s.profile.exec_time_ms / 1000.0]
+                         for s in slots], np.float32)
+    off_feats = np.array([[p.gpu_util, p.sm_activity, p.sm_occupancy,
+                           p.exec_time_ms / 1000.0] for p in uniq], np.float32)
+    by_type: dict[str, list[int]] = {}
+    for i, s in enumerate(slots):
+        by_type.setdefault(s.gpu_type, []).append(i)
+    values = np.zeros((n, u), np.float64)
+    for gpu_type, idxs in by_type.items():
+        k = len(idxs)
+        feats = np.empty((k, u, N_FEATURES), np.float32)
+        feats[:, :, 0:4] = on_feats[idxs][:, None, :]
+        feats[:, :, 4:8] = off_feats[None, :, :]
+        feats[:, :, 8] = shares[idxs].astype(np.float32)[:, None]
+        pred = predictor.predict(gpu_type, feats.reshape(k * u, N_FEATURES))
+        values[idxs] = pred.reshape(k, u)
+    values[values < cfg.min_weight] = 0.0
+    return values, col_group, shares
 
 
 def schedule(slots: list[OnlineSlot], jobs: list[OfflineJob],
@@ -64,29 +119,19 @@ def schedule(slots: list[OnlineSlot], jobs: list[OfflineJob],
     if not slots or not jobs:
         return []
     n, m = len(slots), len(jobs)
-    # batched prediction: one feature matrix per gpu type
-    weights = np.zeros((n, m), dtype=np.float64)
-    shares = np.zeros((n,), dtype=np.float64)
-    by_type: dict[str, list[int]] = {}
-    for i, s in enumerate(slots):
-        shares[i] = _sm_share(cfg, s.profile)
-        by_type.setdefault(s.gpu_type, []).append(i)
-    for gpu_type, idxs in by_type.items():
-        feats = np.stack([
-            pair_features(slots[i].profile, j.profile, shares[i])
-            for i in idxs for j in jobs])
-        pred = predictor.predict(gpu_type, feats).reshape(len(idxs), m)
-        for row, i in enumerate(idxs):
-            weights[i] = pred[row]
-    weights[weights < cfg.min_weight] = 0.0
-
+    values, col_group, shares = build_weight_grid(slots, jobs, predictor, cfg)
     if cfg.use_matching:
-        pairs = km_match(weights)
+        if max(n, m) <= cfg.shard_size:
+            pairs = km_match(values[:, col_group])      # dense exact KM
+        else:
+            pairs = sharded_match_compact(
+                values, col_group, shard_size=cfg.shard_size,
+                row_slack=cfg.row_slack)
     else:
         # MuxFlow-M ablation: FIFO jobs onto arbitrary (first) free devices
-        pairs = [(i, j) for i, j in zip(range(n), range(min(n, m)))]
-        pairs = [(i, j) for i, j in pairs if weights[i, j] > 0]
+        pairs = [(i, i) for i in range(min(n, m))
+                 if values[i, col_group[i]] > 0]
     return [Assignment(device_id=slots[i].device_id, job_id=jobs[j].job_id,
                        sm_share=float(shares[i]),
-                       predicted_tput=float(weights[i, j]))
+                       predicted_tput=float(values[i, col_group[j]]))
             for i, j in pairs]

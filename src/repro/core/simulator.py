@@ -9,26 +9,44 @@ predictor + KM matching scheduler, SysMonitor protection/eviction, the mixed
 error handler, checkpoint/restart fault tolerance — and the paper's
 baselines: Online-only, Time-sharing (Gandiva-style), and Priority-based
 time-sharing (AntMan/PAI-style), plus the MuxFlow-S/-M/-S-M ablations.
+
+This module holds the *vectorized* engine: device state lives in
+struct-of-arrays numpy form (:class:`FleetState`) and each 30 s tick is a
+handful of array ops, so a 20 000-device × 12-hour trace simulates in minutes
+on CPU.  Scheduling rounds go through the partitioned (sharded) matcher in
+``core/scheduler.py``.  The original per-device reference engine survives in
+``core/simulator_legacy.py``; a fixed-seed parity test pins this engine to
+it.  Both engines draw per-tick randomness as (3, n_devices) uniform blocks
+from one stream and read trace/profile inputs from the same vectorized
+providers, so their trajectories are reproducible against each other.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
+import time
 
 import numpy as np
 
-from repro.core.errors import ERROR_MIX, ErrorKind, MixedErrorHandler, sample_error
-from repro.core.interference import (OFFLINE_MODEL_PROFILES, memory_feasible,
-                                     online_profile, shared_performance)
-from repro.core.predictor import SpeedPredictor
-from repro.core.protection import DeviceTelemetry
-from repro.core.scheduler import (Assignment, OfflineJob, OnlineSlot,
-                                  SchedulerConfig, schedule)
-from repro.core.sysmonitor import GPUState, SysMonitor
-from repro.core.traces import SERVICES, OfflineJobSpec, OnlineQPS, make_trace
+from repro.core.errors import MixedErrorHandler, error_from_uniform
+from repro.core.interference import (OFFLINE_MODEL_PROFILES,
+                                     ONLINE_SERVICE_PROFILES, WorkloadProfile,
+                                     memory_feasible, online_profile,
+                                     online_profile_arrays,
+                                     shared_performance_arrays)
+from repro.core.predictor import CachedSpeedPredictor, SpeedPredictor
+from repro.core.scheduler import (OfflineJob, OnlineSlot, SchedulerConfig,
+                                  schedule)
+from repro.core.sysmonitor import VectorSysMonitor
+from repro.core.traces import (SERVICES, OfflineJobSpec, OnlineQPS, QPSBank,
+                               make_trace)
 
 POLICIES = ("muxflow", "muxflow-s", "muxflow-m", "muxflow-s-m",
             "online-only", "time-sharing", "pb-time-sharing")
+
+_BASE_LATENCY_MS = {s: ONLINE_SERVICE_PROFILES[s]["base_latency_ms"]
+                    for s in ONLINE_SERVICE_PROFILES}
+_P99_BIN_MS = 0.05
+_P99_MAX_MS = 10_000.0
 
 
 @dataclasses.dataclass
@@ -49,30 +67,9 @@ class SimConfig:
     device_repair_s: float = 1800.0
     online_outage_s: float = 120.0             # when an error propagates
     memory_quota: float = 0.4
-
-
-@dataclasses.dataclass
-class _Device:
-    idx: int
-    gpu_type: str
-    service: str
-    qps: OnlineQPS
-    monitor: SysMonitor
-    job: "_RunningJob | None" = None
-    failed_until: float = -1.0
-    online_outage_until: float = -1.0
-    base_latency_ms: float = 50.0
-    speed: float = 1.0                         # A10 runs offline 1.35x faster
-
-
-@dataclasses.dataclass
-class _RunningJob:
-    spec: OfflineJobSpec
-    progress_s: float                          # in separate-execution seconds
-    checkpoint_s: float                        # last checkpointed progress
-    sm_share: float
-    started_at: float
-    shared_wall_s: float = 0.0                 # wall seconds on a device
+    # paper-scale knobs
+    shard_size: int = 256                      # matcher partition bound
+    predictor_cache_quantum: float = 0.0       # >0: memoize quantized rows
 
 
 @dataclasses.dataclass
@@ -105,44 +102,102 @@ class SimResults:
     timeline: dict = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class FleetState:
+    """Struct-of-arrays device state — the vectorized engine's hot data."""
+    has_job: np.ndarray          # bool (n,)
+    model_idx: np.ndarray        # int64 (n,) — offline model of current job
+    sm_share: np.ndarray         # float64 (n,)
+    progress: np.ndarray         # float64 (n,) separate-execution seconds
+    checkpoint: np.ndarray       # float64 (n,) last checkpointed progress
+    started: np.ndarray          # float64 (n,)
+    wall: np.ndarray             # float64 (n,) shared wall seconds
+    duration: np.ndarray         # float64 (n,) remaining-at-start duration
+    failed_until: np.ndarray     # float64 (n,)
+    outage_until: np.ndarray     # float64 (n,)
+
+    @classmethod
+    def zeros(cls, n: int) -> "FleetState":
+        return cls(
+            has_job=np.zeros(n, bool),
+            model_idx=np.zeros(n, np.int64),
+            sm_share=np.zeros(n, np.float64),
+            progress=np.zeros(n, np.float64),
+            checkpoint=np.zeros(n, np.float64),
+            started=np.zeros(n, np.float64),
+            wall=np.zeros(n, np.float64),
+            duration=np.zeros(n, np.float64),
+            failed_until=np.full(n, -1.0, np.float64),
+            outage_until=np.full(n, -1.0, np.float64),
+        )
+
+
 class ClusterSim:
+    """Vectorized MuxFlow cluster simulator (paper-scale capable)."""
+
     def __init__(self, cfg: SimConfig, predictor: SpeedPredictor | None = None):
         assert cfg.policy in POLICIES, cfg.policy
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
-        self.predictor = predictor
         if cfg.policy.startswith("muxflow") and predictor is None:
             raise ValueError("MuxFlow policies need a speed predictor")
-        self.devices = [
-            _Device(
-                idx=i,
-                gpu_type=cfg.gpu_types[i % len(cfg.gpu_types)],
-                service=SERVICES[i % len(SERVICES)],
-                qps=OnlineQPS(self.rng),
-                monitor=SysMonitor(now=0.0),
-                base_latency_ms={"recommend": 38.0, "translate": 55.0,
-                                 "vision": 70.0}[SERVICES[i % len(SERVICES)]],
-                speed=1.35 if cfg.gpu_types[i % len(cfg.gpu_types)] == "A10" else 1.0,
-            )
-            for i in range(cfg.n_devices)
-        ]
-        self.jobs = make_trace(cfg.trace, cfg.n_devices, cfg.horizon_s, cfg.seed)
+        if predictor is not None and cfg.predictor_cache_quantum > 0:
+            predictor = CachedSpeedPredictor(
+                predictor, quantum=cfg.predictor_cache_quantum)
+        self.predictor = predictor
+        n = cfg.n_devices
+        # per-device static attributes (same construction order as the
+        # reference engine so the RNG stream is shared)
+        self.qps_bank = QPSBank([OnlineQPS(self.rng) for _ in range(n)])
+        self.service_idx = np.array([i % len(SERVICES) for i in range(n)],
+                                    np.int64)
+        self.gpu_type = [cfg.gpu_types[i % len(cfg.gpu_types)]
+                         for i in range(n)]
+        self.speed = np.array([1.35 if t == "A10" else 1.0
+                               for t in self.gpu_type], np.float64)
+        self.base_latency = np.array(
+            [_BASE_LATENCY_MS[SERVICES[s]] for s in self.service_idx],
+            np.float64)
+        self.monitor = VectorSysMonitor(n, now=0.0)
+        self.state = FleetState.zeros(n)
+        self.job_spec: list[OfflineJobSpec | None] = [None] * n
+        # offline model constants
+        self.models = tuple(OFFLINE_MODEL_PROFILES)
+        self.model_of = {m: i for i, m in enumerate(self.models)}
+        profs = [OFFLINE_MODEL_PROFILES[m] for m in self.models]
+        self.off_arrs = {
+            "gpu_util": np.array([p.gpu_util for p in profs]),
+            "sm_activity": np.array([p.sm_activity for p in profs]),
+            "sm_occupancy": np.array([p.sm_occupancy for p in profs]),
+            "mem_bw": np.array([p.mem_bw for p in profs]),
+            "exec_time_ms": np.array([p.exec_time_ms for p in profs]),
+            "mem_bytes_frac": np.array([p.mem_bytes_frac for p in profs]),
+        }
+        # xCUDA memory-quota feasibility is per (service, model) — online and
+        # offline memory footprints are constants of the workload class
+        self.feasible = np.array(
+            [[memory_feasible(online_profile(svc, 50.0),
+                              OFFLINE_MODEL_PROFILES[m], cfg.memory_quota)
+              for m in self.models] for svc in SERVICES])
+        self.jobs = make_trace(cfg.trace, n, cfg.horizon_s, cfg.seed)
         self.pending: list[OfflineJobSpec] = []
         self.err_handler = MixedErrorHandler(graceful_enabled=cfg.graceful_exit)
-        self.finished: list[tuple[OfflineJobSpec, float]] = []   # (spec, jct)
+        self.finished: list[tuple] = []            # (spec, jct, wall, progress)
         self.evictions = 0
         self.executions = 0
         self.errors_injected = 0
         self.online_incidents = 0
         # accumulators
         self._lat_sum = self._lat_wsum = 0.0
-        self._lat_samples: list[float] = []
         self._base_lat_sum = 0.0
-        self._util_acc = np.zeros(3)          # gpu_util, sm_act, mem
+        self._lat_hist = np.zeros(int(_P99_MAX_MS / _P99_BIN_MS), np.int64)
+        self._util_acc = np.zeros(3)
         self._util_ticks = 0
         self._tput_sum = self._tput_ticks = 0.0
         self._timeline: dict[str, list] = {"t": [], "gpu_util": [], "sm_act": [],
                                            "mem": [], "slowdown": [], "tput": []}
+        # instrumentation for the scale benchmarks
+        self.schedule_latencies: list[float] = []
 
     # ------------------------------------------------------------------ run
     def run(self) -> SimResults:
@@ -152,13 +207,13 @@ class ClusterSim:
         next_sched = 0.0
         n_ticks = int(cfg.horizon_s / cfg.tick_s)
         for _ in range(n_ticks):
-            # job arrivals
             while job_i < len(self.jobs) and self.jobs[job_i].submit_s <= t:
                 self.pending.append(self.jobs[job_i])
                 job_i += 1
-            # scheduling interval
             if cfg.policy != "online-only" and t >= next_sched:
+                t0 = time.perf_counter()
                 self._schedule(t)
+                self.schedule_latencies.append(time.perf_counter() - t0)
                 next_sched = t + cfg.schedule_interval_s
             self._tick(t)
             t += cfg.tick_s
@@ -167,206 +222,242 @@ class ClusterSim:
     # ------------------------------------------------------------- schedule
     def _schedule(self, t: float) -> None:
         cfg = self.cfg
+        s = self.state
         if cfg.policy in ("time-sharing", "pb-time-sharing"):
             # greedy FIFO packing: any alive device without a job
-            for d in self.devices:
-                if not self.pending:
-                    break
-                if d.job is None and d.failed_until <= t:
-                    spec = self.pending.pop(0)
-                    self._start_job(d, spec, 0.5, t)
+            free = np.flatnonzero(~s.has_job & (s.failed_until <= t))
+            for i in free[:len(self.pending)]:
+                self._start_job(int(i), self.pending.pop(0), 0.5, t)
+            return
+        if not self.pending:
             return
         sched_cfg = SchedulerConfig(
             use_dynamic_sm=cfg.policy in ("muxflow", "muxflow-m"),
-            use_matching=cfg.policy in ("muxflow", "muxflow-s"))
+            use_matching=cfg.policy in ("muxflow", "muxflow-s"),
+            shard_size=cfg.shard_size)
         # free healthy devices (the paper only schedules onto Healthy GPUs)
-        slots, free_devs = [], []
-        for d in self.devices:
-            if d.job is None and d.failed_until <= t and d.monitor.schedulable:
-                on = online_profile(d.service, d.qps.qps(t))
-                slots.append(OnlineSlot(d.idx, d.gpu_type, on))
-                free_devs.append(d)
-        jobs = [OfflineJob(s.job_id, OFFLINE_MODEL_PROFILES[s.model],
-                           s.duration_s) for s in self.pending]
-        quota_ok = {
-            (sl.device_id, jb.job_id)
-            for sl in slots for jb in jobs
-            if memory_feasible(sl.profile, jb.profile, cfg.memory_quota)}
+        free = np.flatnonzero(~s.has_job & (s.failed_until <= t)
+                              & self.monitor.schedulable)
+        if free.size == 0:
+            return
+        qps = self.qps_bank.qps(t)
+        on = online_profile_arrays(self.service_idx, qps, SERVICES)
+        slots = [
+            OnlineSlot(int(i), self.gpu_type[i], WorkloadProfile(
+                name=SERVICES[self.service_idx[i]],
+                gpu_util=float(on["gpu_util"][i]),
+                sm_activity=float(on["sm_activity"][i]),
+                sm_occupancy=float(on["sm_occupancy"][i]),
+                mem_bw=float(on["mem_bw"][i]),
+                exec_time_ms=float(on["exec_time_ms"][i]),
+                mem_bytes_frac=float(on["mem_bytes_frac"][i])))
+            for i in free]
+        jobs = [OfflineJob(sp.job_id, OFFLINE_MODEL_PROFILES[sp.model],
+                           sp.duration_s) for sp in self.pending]
         assignments = schedule(slots, jobs, self.predictor, sched_cfg)
-        by_job = {s.job_id: s for s in self.pending}
-        dev_by_id = {d.idx: d for d in self.devices}
+        by_job = {sp.job_id: sp for sp in self.pending}
+        assigned: set[int] = set()
         for a in assignments:
-            if (a.device_id, a.job_id) not in quota_ok:
-                continue  # xCUDA memory quota rejects the pairing
-            spec = by_job.pop(a.job_id, None)
-            if spec is None:
+            spec = by_job.get(a.job_id)
+            if spec is None or a.job_id in assigned:
                 continue
-            self.pending.remove(spec)
-            self._start_job(dev_by_id[a.device_id], spec, a.sm_share, t)
+            if not self.feasible[self.service_idx[a.device_id],
+                                 self.model_of[spec.model]]:
+                continue  # xCUDA memory quota rejects the pairing
+            assigned.add(a.job_id)
+            self._start_job(a.device_id, spec, a.sm_share, t)
+        if assigned:
+            self.pending = [sp for sp in self.pending
+                            if sp.job_id not in assigned]
 
-    def _start_job(self, d: _Device, spec: OfflineJobSpec, share: float,
+    def _start_job(self, i: int, spec: OfflineJobSpec, share: float,
                    t: float) -> None:
-        d.job = _RunningJob(spec=spec, progress_s=0.0, checkpoint_s=0.0,
-                            sm_share=share, started_at=t)
+        s = self.state
+        s.has_job[i] = True
+        s.model_idx[i] = self.model_of[spec.model]
+        s.sm_share[i] = share
+        s.progress[i] = 0.0
+        s.checkpoint[i] = 0.0
+        s.started[i] = t
+        s.wall[i] = 0.0
+        s.duration[i] = spec.duration_s
+        self.job_spec[i] = spec
         self.executions += 1
 
     # ----------------------------------------------------------------- tick
     def _tick(self, t: float) -> None:
         cfg = self.cfg
+        s = self.state
+        n = cfg.n_devices
         dt = cfg.tick_s
-        lat_num = lat_den = 0.0
-        base_num = 0.0
-        util = np.zeros(3)
-        tput_sum, tput_n = 0.0, 0
-        slow_sum, slow_n = 0.0, 0
-        for d in self.devices:
-            # hardware failure / recovery
-            if d.failed_until > t:
-                continue
-            if self.rng.random() < dt / (cfg.device_mtbf_h * 3600.0):
-                d.failed_until = t + cfg.device_repair_s
-                self._evict(d, t, requeue=True, count=False)
-                continue
-            qps = d.qps.qps(t)
-            on = online_profile(d.service, qps)
-            slowdown, tput = 1.0, 0.0
-            if d.job is not None:
-                off = OFFLINE_MODEL_PROFILES[d.job.spec.model]
-                slowdown, tput = self._policy_perf(d, on, off)
-                tput *= d.speed
-                # offline progress + periodic checkpoint
-                d.job.progress_s += tput * dt
-                d.job.shared_wall_s += dt
-                if (d.job.progress_s - d.job.checkpoint_s
-                        >= cfg.checkpoint_interval_s):
-                    d.job.checkpoint_s = d.job.progress_s
-                tput_sum += tput
-                tput_n += 1
-                # error injection (offline container errors)
-                p_err = cfg.error_rate_per_job_hour * dt / 3600.0
-                if self.rng.random() < p_err:
-                    self._inject_error(d, t)
-                if d.job is not None and d.job.progress_s >= d.job.spec.duration_s:
-                    self.finished.append((d.job.spec, t - d.job.spec.submit_s,
-                                          d.job.shared_wall_s, d.job.progress_s))
-                    d.job = None
-            # telemetry + SysMonitor
-            used_off = (min(d.job.sm_share,
-                            OFFLINE_MODEL_PROFILES[d.job.spec.model].sm_activity)
-                        if d.job else 0.0)
-            tele = DeviceTelemetry(
-                ts=t,
-                gpu_util=min(1.0, on.gpu_util + (0.62 * used_off if d.job else 0.0)),
-                sm_activity=min(1.0, on.sm_activity + used_off * 0.45),
-                sm_clock=1590.0 - 420.0 * max(0.0, on.sm_activity + used_off - 0.8),
-                mem_used_frac=min(1.0, on.mem_bytes_frac
-                                  + (OFFLINE_MODEL_PROFILES[d.job.spec.model].mem_bytes_frac
-                                     if d.job else 0.0)),
-            )
-            state, events = d.monitor.update(tele, t)
-            if "evict" in events and d.job is not None:
-                self._evict(d, t, requeue=True)
-            # online latency accounting (weighted by qps)
-            outage = d.online_outage_until > t
-            lat = d.base_latency_ms * slowdown * (10.0 if outage else 1.0)
-            if outage:
-                self.online_incidents += 0  # counted at injection
-            lat_num += lat * qps
-            base_num += d.base_latency_ms * qps
-            lat_den += qps
-            self._lat_samples.append(lat)
-            slow_sum += slowdown
-            slow_n += 1
-            util += np.array([tele.gpu_util, tele.sm_activity, tele.mem_used_frac])
-        self._lat_sum += lat_num
-        self._base_lat_sum += base_num
-        self._lat_wsum += lat_den
+        # one (3, n) uniform block per tick — the shared RNG contract with
+        # the reference engine: rows are (hw failure, error, error kind)
+        fail_u, err_u, kind_u = self.rng.random((3, n))
+        requeues: list[tuple[int, OfflineJobSpec]] = []
+        alive = s.failed_until <= t
+        new_fail = alive & (fail_u < dt / (cfg.device_mtbf_h * 3600.0))
+        for i in np.flatnonzero(new_fail):
+            s.failed_until[i] = t + cfg.device_repair_s
+            self._evict(int(i), requeues, count=False)
+        act = alive & ~new_fail
+        qps = self.qps_bank.qps(t)
+        on = online_profile_arrays(self.service_idx, qps, SERVICES)
+        busy = act & s.has_job
+        slowdown, tput = self._policy_perf(on, busy)
+        tput = tput * self.speed
+        slowdown = np.where(busy, slowdown, 1.0)
+        tput = np.where(busy, tput, 0.0)
+        # offline progress + periodic checkpoint
+        s.progress[busy] += tput[busy] * dt
+        s.wall[busy] += dt
+        ck = busy & (s.progress - s.checkpoint >= cfg.checkpoint_interval_s)
+        s.checkpoint[ck] = s.progress[ck]
+        tput_n = int(busy.sum())
+        tput_sum = float(tput[busy].sum())
+        # error injection (offline container errors)
+        p_err = cfg.error_rate_per_job_hour * dt / 3600.0
+        for i in np.flatnonzero(busy & (err_u < p_err)):
+            self._inject_error(int(i), t, float(kind_u[i]), requeues)
+        # job completion (error-evicted devices dropped has_job already)
+        for i in np.flatnonzero(busy & s.has_job & (s.progress >= s.duration)):
+            spec = self.job_spec[i]
+            self.finished.append((spec, t - spec.submit_s,
+                                  float(s.wall[i]), float(s.progress[i])))
+            s.has_job[i] = False
+            self.job_spec[i] = None
+        # telemetry + SysMonitor
+        used_off = np.where(
+            s.has_job,
+            np.minimum(s.sm_share, self.off_arrs["sm_activity"][s.model_idx]),
+            0.0)
+        tele_util = np.minimum(1.0, on["gpu_util"] + 0.62 * used_off)
+        tele_sm = np.minimum(1.0, on["sm_activity"] + used_off * 0.45)
+        tele_clock = 1590.0 - 420.0 * np.maximum(
+            0.0, on["sm_activity"] + used_off - 0.8)
+        tele_mem = np.minimum(
+            1.0, on["mem_bytes_frac"]
+            + np.where(s.has_job, self.off_arrs["mem_bytes_frac"][s.model_idx],
+                       0.0))
+        level = self.monitor.classify(tele_util, tele_sm, tele_mem,
+                                      tele_clock, 60.0)
+        evict_ev = self.monitor.update(level, t, active=act)
+        for i in np.flatnonzero(evict_ev & s.has_job):
+            self._evict(int(i), requeues, count=True)
+        # requeues resume from checkpoint, at the head of the queue in the
+        # reference engine's order (reverse device order)
+        if requeues:
+            requeues.sort(key=lambda e: e[0])
+            self.pending[:0] = [spec for _, spec in reversed(requeues)]
+        # online latency accounting (weighted by qps)
+        outage = s.outage_until > t
+        lat = self.base_latency * slowdown * np.where(outage, 10.0, 1.0)
+        lat_a, qps_a = lat[act], qps[act]
+        self._lat_sum += float((lat_a * qps_a).sum())
+        self._base_lat_sum += float((self.base_latency[act] * qps_a).sum())
+        self._lat_wsum += float(qps_a.sum())
+        np.add.at(self._lat_hist,
+                  np.minimum((lat_a / _P99_BIN_MS).astype(np.int64),
+                             self._lat_hist.size - 1), 1)
+        util = np.array([tele_util[act].sum(), tele_sm[act].sum(),
+                         tele_mem[act].sum()])
         self._util_acc += util
         self._util_ticks += 1
         if tput_n:
             self._tput_sum += tput_sum / tput_n
             self._tput_ticks += 1
         if int(t) % 600 == 0:
-            n = max(len(self.devices), 1)
+            slow_n = int(act.sum())
             self._timeline["t"].append(t)
-            self._timeline["gpu_util"].append(util[0] / n)
-            self._timeline["sm_act"].append(util[1] / n)
-            self._timeline["mem"].append(util[2] / n)
-            self._timeline["slowdown"].append(slow_sum / max(slow_n, 1))
-            self._timeline["tput"].append(tput_sum / max(tput_n, 1) if tput_n else 0.0)
+            self._timeline["gpu_util"].append(util[0] / max(n, 1))
+            self._timeline["sm_act"].append(util[1] / max(n, 1))
+            self._timeline["mem"].append(util[2] / max(n, 1))
+            self._timeline["slowdown"].append(
+                float(slowdown[act].sum()) / max(slow_n, 1))
+            self._timeline["tput"].append(
+                tput_sum / max(tput_n, 1) if tput_n else 0.0)
 
-    def _policy_perf(self, d: _Device, on, off) -> tuple[float, float]:
-        """(online slowdown, offline normalized tput) per policy."""
+    def _policy_perf(self, on: dict, busy: np.ndarray,
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """(online slowdown, offline normalized tput) arrays per policy."""
         pol = self.cfg.policy
+        s = self.state
+        n = self.cfg.n_devices
         if pol.startswith("muxflow"):
-            return shared_performance(on, off, d.job.sm_share)
+            off = {k: self.off_arrs[k][s.model_idx]
+                   for k in ("gpu_util", "sm_activity", "mem_bw")}
+            return shared_performance_arrays(on, off, s.sm_share)
         if pol == "time-sharing":
             # fair time slices (Gandiva-style): offline takes ~half the time
             off_duty = 0.5
-            slowdown = 1.0 + 0.9 * off_duty * min(1.0, on.gpu_util * 2.2)
-            return slowdown, off_duty * 0.9
+            slow = 1.0 + 0.9 * off_duty * np.minimum(1.0, on["gpu_util"] * 2.2)
+            return slow, np.full(n, off_duty * 0.9)
         if pol == "pb-time-sharing":
             # online priority: offline fills idle *time* only (AntMan/PAI)
-            idle = max(0.0, 1.0 - on.gpu_util)
-            return 1.05, idle * 0.8
-        return 1.0, 0.0
+            idle = np.maximum(0.0, 1.0 - on["gpu_util"])
+            return np.full(n, 1.05), idle * 0.8
+        return np.ones(n), np.zeros(n)
 
-    def _inject_error(self, d: _Device, t: float) -> None:
+    def _inject_error(self, i: int, t: float, kind_u: float,
+                      requeues: list) -> None:
         self.errors_injected += 1
-        kind = sample_error(self.rng)
-        handled = self.err_handler.handle(kind)
+        handled = self.err_handler.handle(error_from_uniform(kind_u))
         if handled.propagated:
-            d.online_outage_until = t + self.cfg.online_outage_s
+            self.state.outage_until[i] = t + self.cfg.online_outage_s
             self.online_incidents += 1
         if handled.action.value == "graceful_exit":
             # graceful exit checkpoints before releasing
-            if d.job is not None:
-                d.job.checkpoint_s = d.job.progress_s
-        self._evict(d, t, requeue=True, count=False)
+            self.state.checkpoint[i] = self.state.progress[i]
+        self._evict(i, requeues, count=False)
 
-    def _evict(self, d: _Device, t: float, requeue: bool, count: bool = True) -> None:
-        if d.job is None:
+    def _evict(self, i: int, requeues: list, count: bool = True) -> None:
+        s = self.state
+        if not s.has_job[i]:
             return
         if count:
             self.evictions += 1
-        job = d.job
-        d.job = None
-        if requeue and job.progress_s < job.spec.duration_s:
+        spec = self.job_spec[i]
+        progress = float(s.progress[i])
+        checkpoint = float(s.checkpoint[i])
+        s.has_job[i] = False
+        self.job_spec[i] = None
+        if progress < spec.duration_s:
             # resume from last checkpoint
-            spec = dataclasses.replace(
-                job.spec, duration_s=job.spec.duration_s - job.checkpoint_s,
-                submit_s=job.spec.submit_s)
-            spec.job_id = job.spec.job_id
-            self.pending.insert(0, spec)
+            requeues.append((i, dataclasses.replace(
+                spec, duration_s=spec.duration_s - checkpoint)))
 
     # -------------------------------------------------------------- results
     def _results(self, t_end: float) -> SimResults:
+        s = self.state
         r = SimResults(policy=self.cfg.policy, trace=self.cfg.trace)
         r.n_jobs = len(self.jobs)
         r.n_finished = len(self.finished)
         if self.finished:
             r.avg_jct_s = float(np.mean([jct for _, jct, _, _ in self.finished]))
-            r.makespan_s = float(max(jct + s.submit_s
-                                     for s, jct, _, _ in self.finished))
+            r.makespan_s = float(max(jct + sp.submit_s
+                                     for sp, jct, _, _ in self.finished))
         r.avg_latency_ms = self._lat_sum / max(self._lat_wsum, 1e-9)
         r.base_avg_latency_ms = self._base_lat_sum / max(self._lat_wsum, 1e-9)
         r.avg_slowdown = r.avg_latency_ms / max(r.base_avg_latency_ms, 1e-9)
-        if self._lat_samples:
-            r.p99_latency_ms = float(np.percentile(self._lat_samples, 99))
-        util = self._util_acc / max(self._util_ticks * len(self.devices), 1)
+        total = int(self._lat_hist.sum())
+        if total:
+            k = int(np.searchsorted(np.cumsum(self._lat_hist),
+                                    np.ceil(0.99 * total)))
+            r.p99_latency_ms = (k + 1) * _P99_BIN_MS
+        util = self._util_acc / max(self._util_ticks * self.cfg.n_devices, 1)
         r.gpu_util, r.sm_activity, r.mem_used = map(float, util)
         r.avg_norm_tput = self._tput_sum / max(self._tput_ticks, 1e-9)
         # Eq. 3: oversold GPU — effective separate-execution seconds delivered
         # per wall-second the offline workloads spent sharing a device
-        prog = sum(d.job.progress_s for d in self.devices if d.job)
-        wall = sum(d.job.shared_wall_s for d in self.devices if d.job)
+        prog = float(s.progress[s.has_job].sum())
+        wall = float(s.wall[s.has_job].sum())
         prog += sum(p for _, _, _, p in self.finished)
         wall += sum(w for _, _, w, _ in self.finished)
         r.oversold_gpu = float(min(1.0, prog / max(wall, 1e-9)))
         r.evictions = self.evictions
         r.eviction_frac = self.evictions / max(self.executions, 1)
         r.errors_injected = self.errors_injected
-        r.errors_propagated = sum(1 for h in self.err_handler.handled if h.propagated)
+        r.errors_propagated = sum(1 for h in self.err_handler.handled
+                                  if h.propagated)
         r.online_incidents = self.online_incidents
         r.timeline = self._timeline
         return r

@@ -56,6 +56,48 @@ class OnlineQPS:
         return float(np.clip(v, c.qps_lo, c.qps_hi * 1.3))
 
 
+class QPSBank:
+    """Struct-of-arrays view over a fleet of :class:`OnlineQPS` curves.
+
+    ``qps(t)`` evaluates the whole fleet in a handful of numpy ops using the
+    exact arithmetic of ``OnlineQPS.qps`` (same operation order, so a device's
+    value is bitwise-identical whether read from the bank or recomputed) —
+    this is what both simulator engines consume, which keeps the vectorized
+    engine and the per-device reference engine on identical trace inputs.
+    """
+
+    def __init__(self, curves: list[OnlineQPS]):
+        self.n = len(curves)
+        cfg = curves[0].cfg if curves else OnlineTraceCfg()
+        self.cfg = cfg
+        self.base = np.array([q.base for q in curves], np.float64)
+        self.amp = np.array([q.amp for q in curves], np.float64)
+        self.phase = np.array([q.phase for q in curves], np.float64)
+        self.noise_mod = np.array([float(q.noise_seed % 7) for q in curves],
+                                  np.float64)
+        n_b = max((len(q.bursts) for q in curves), default=0)
+        # padded bursts: inactive slots get start past any (t % DAY_S)
+        self.burst_start = np.full((self.n, n_b), 2.0 * DAY_S, np.float64)
+        self.burst_len = np.zeros((self.n, n_b), np.float64)
+        self.burst_mult = np.ones((self.n, n_b), np.float64)
+        for i, q in enumerate(curves):
+            for b, (start, ln, mult) in enumerate(q.bursts):
+                self.burst_start[i, b] = start
+                self.burst_len[i, b] = ln
+                self.burst_mult[i, b] = mult
+
+    def qps(self, t: float) -> np.ndarray:
+        c = self.cfg
+        v = self.base + self.amp * np.sin(2 * np.pi * (t - self.phase) / DAY_S)
+        v = v * (1.0 + c.noise * np.sin(2 * np.pi * t / 777.0 + self.noise_mod))
+        tmod = t % DAY_S
+        for b in range(self.burst_start.shape[1]):
+            active = ((self.burst_start[:, b] <= tmod)
+                      & (tmod < self.burst_start[:, b] + self.burst_len[:, b]))
+            v = np.where(active, v * self.burst_mult[:, b], v)
+        return np.clip(v, c.qps_lo, c.qps_hi * 1.3)
+
+
 @dataclasses.dataclass
 class OfflineJobSpec:
     job_id: int

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -1e30
 
 
@@ -36,12 +40,12 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32) * sm_scale          # (G, d)
-    k_blk = k_ref[0].astype(jnp.float32)                 # (block_k, d)
-    v_blk = v_ref[0].astype(jnp.float32)
+    q = q_ref[...][0].astype(jnp.float32) * sm_scale          # (G, d)
+    k_blk = k_ref[...][0].astype(jnp.float32)                 # (block_k, d)
+    v_blk = v_ref[...][0].astype(jnp.float32)
     s = q @ k_blk.T                                      # (G, block_k)
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
-    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+    s = jnp.where(k_pos < len_ref[...][0], s, NEG_INF)
     m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
     p = jnp.exp(s - m_new[:, None])
@@ -52,8 +56,8 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
 
     @pl.when(ki == grid_k - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
-                    ).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)[None]
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -90,7 +94,7 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pltpu.VMEM((G,), jnp.float32),      # running sum
             pltpu.VMEM((G, d), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qt, kt, vt, lens)

@@ -31,7 +31,9 @@ NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_k,
                   causal, window, sm_scale):
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * sm_scale          # (block_q, d)
+    # NB: length-1 slices (not raw int indices) throughout — int indices in
+    # ref loads/stores break jax 0.4.x interpret-mode discharge on CPU
+    q = q_ref[...][0].astype(jnp.float32) * sm_scale     # (block_q, d)
     d = q.shape[-1]
     m = jnp.full((block_q,), NEG_INF, jnp.float32)
     l = jnp.zeros((block_q,), jnp.float32)
@@ -42,10 +44,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_k,
 
     def body(ki, carry):
         m, l, acc = carry
-        k_blk = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
-                                slice(None))).astype(jnp.float32)
-        v_blk = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
-                                slice(None))).astype(jnp.float32)
+        k_blk = pl.load(k_ref, (slice(0, 1), pl.dslice(ki * block_k, block_k),
+                                slice(None)))[0].astype(jnp.float32)
+        v_blk = pl.load(v_ref, (slice(0, 1), pl.dslice(ki * block_k, block_k),
+                                slice(None)))[0].astype(jnp.float32)
         s = q @ k_blk.T                                  # (block_q, block_k)
         k_pos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_k), 1)
@@ -63,7 +65,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_k,
         return m_new, l_new, acc_new
 
     m, l, acc = jax.lax.fori_loop(0, num_k, body, (m, l, acc))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)[None]
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

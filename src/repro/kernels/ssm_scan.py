@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _ssm_kernel(dt_ref, bx_ref, c_ref, alog_ref, o_ref, h_ref, *, chunk, n_state):
     ci = pl.program_id(1)
@@ -28,10 +32,10 @@ def _ssm_kernel(dt_ref, bx_ref, c_ref, alog_ref, o_ref, h_ref, *, chunk, n_state
     def _init():
         h_ref[...] = jnp.zeros_like(h_ref)
 
-    dt = dt_ref[0].astype(jnp.float32)          # (chunk, d_blk)
-    bx = bx_ref[0].astype(jnp.float32)          # (chunk, d_blk)  = dt*x (pre-multiplied)
-    Bc = c_ref[0, :, 0, :]                      # (chunk, N)  B_t
-    Cc = c_ref[0, :, 1, :]                      # (chunk, N)  C_t
+    dt = dt_ref[...][0].astype(jnp.float32)          # (chunk, d_blk)
+    bx = bx_ref[...][0].astype(jnp.float32)          # (chunk, d_blk)  = dt*x (pre-multiplied)
+    Bc = c_ref[...][0, :, 0, :]                      # (chunk, N)  B_t
+    Cc = c_ref[...][0, :, 1, :]                      # (chunk, N)  C_t
     A = -jnp.exp(alog_ref[...].astype(jnp.float32))   # (d_blk, N)
 
     def step(t, carry):
@@ -46,7 +50,7 @@ def _ssm_kernel(dt_ref, bx_ref, c_ref, alog_ref, o_ref, h_ref, *, chunk, n_state
     out0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
     h, out = jax.lax.fori_loop(0, chunk, step, (h0, out0))
     h_ref[...] = h
-    o_ref[0] = out.astype(o_ref.dtype)
+    o_ref[...] = out.astype(o_ref.dtype)[None]
 
 
 def ssm_scan(dt: jax.Array, x: jax.Array, B_ssm: jax.Array, C_ssm: jax.Array,
@@ -77,7 +81,7 @@ def ssm_scan(dt: jax.Array, x: jax.Array, B_ssm: jax.Array, C_ssm: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((Bsz, S, di), jnp.float32),
         scratch_shapes=[pltpu.VMEM((di, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(dt.astype(jnp.float32), bx, bc.astype(jnp.float32), A_log)

@@ -185,10 +185,15 @@ def computation_multipliers(comps: dict[str, Computation], entry: str) -> dict[s
 def _dot_flops(ins: Instr, comp: Computation) -> float:
     """2 · prod(output dims) · prod(contracting dims of lhs)."""
     out_elems = shape_elems(ins.type_str)
-    m = re.match(r"\s*%?([\w.\-]+)", ins.rest)
-    if not m:
-        return 0.0
-    lhs_type = comp.shapes.get(m.group(1))
+    # some XLA versions print operand types inline: dot(f32[16,32] %lhs, ...)
+    m_inline = re.match(r"\s*(\w+\[[\d,]*\])", ins.rest)
+    if m_inline:
+        lhs_type = m_inline.group(1)
+    else:
+        m = re.match(r"\s*%?([\w.\-]+)", ins.rest)
+        if not m:
+            return 0.0
+        lhs_type = comp.shapes.get(m.group(1))
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
     if lhs_type is None or cd is None:
         return 2.0 * out_elems  # conservative

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.checkpoint.checkpointing import AsyncCheckpointer, latest_step, restore, save
 from repro.data.pipeline import DataConfig, TokenPipeline

@@ -2,7 +2,7 @@
 dynamic-SM quantization, report generation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.dynamic_sm import dynamic_sm
 from repro.core.interference import (OFFLINE_MODEL_PROFILES, online_profile,
@@ -77,9 +77,74 @@ def test_trace_generation_properties():
     assert sizes == sorted(sizes)
 
 
-def test_report_renders():
+def test_report_renders(tmp_path, monkeypatch):
+    """Render the dry-run/roofline tables from records (synthetic here — the
+    real ones are produced by launch/dryrun.py into experiments/dryrun)."""
+    import json
+
     from repro.launch import report
+
+    ok = {"arch": "gemma_7b", "shape": "train_4k", "status": "ok",
+          "compile_s": 12.0, "memory": {"peak_device_bytes": 8 * 2 ** 30},
+          "hlo": {"dot_flops": 1e12, "bytes": 2e11, "collective_bytes": 1e10,
+                  "collective_breakdown": {"all-reduce": 1e10}},
+          "terms": {"compute_s": 0.01, "memory_s": 0.02, "collective_s": 0.005},
+          "dominant": "memory", "model_flops": 9e11, "useful_ratio": 0.9,
+          "roofline_fraction": 0.4}
+    bad = {"arch": "gemma_7b", "shape": "prefill_32k", "status": "oom",
+           "reason": "hbm exhausted"}
+    (tmp_path / "gemma_7b__train_4k__16x16.json").write_text(json.dumps(ok))
+    (tmp_path / "gemma_7b__prefill_32k__16x16.json").write_text(json.dumps(bad))
+    monkeypatch.setattr(report, "OUT_DIR", str(tmp_path))
     txt = report.dryrun_section("16x16")
-    assert "| arch |" in txt
+    assert "| arch |" in txt and "gemma_7b" in txt and "oom" in txt
     roof = report.roofline_section()
     assert "dominant" in roof and "train_4k" in roof
+
+
+def test_vectorized_profile_and_sharing_match_scalar():
+    """Array-shaped helpers agree with the scalar functions bitwise — the
+    vectorized and per-device simulator engines rely on this."""
+    from repro.core.interference import (offline_profile_arrays,
+                                         online_profile_arrays,
+                                         shared_performance_arrays)
+
+    rng = np.random.default_rng(0)
+    services = ("recommend", "translate", "vision")
+    models = tuple(OFFLINE_MODEL_PROFILES)
+    n = 512
+    sidx = rng.integers(0, len(services), n)
+    midx = rng.integers(0, len(models), n)
+    qps = rng.uniform(0.0, 250.0, n)
+    share = rng.uniform(0.0, 1.0, n)
+    on = online_profile_arrays(sidx, qps, services)
+    off = offline_profile_arrays(midx, models)
+    slow_v, tput_v = shared_performance_arrays(on, off, share)
+    for i in range(0, n, 7):
+        p = online_profile(services[sidx[i]], float(qps[i]))
+        # libm vs numpy transcendentals may differ in the last ULP
+        assert p.gpu_util == on["gpu_util"][i]
+        assert p.sm_activity == pytest.approx(on["sm_activity"][i], rel=1e-14)
+        assert p.mem_bw == on["mem_bw"][i]
+        # given *identical* profile inputs (what both engines consume), the
+        # scalar and vector sharing model agree bitwise
+        import dataclasses as _dc
+
+        p_arr = _dc.replace(p, sm_activity=float(on["sm_activity"][i]),
+                            sm_occupancy=float(on["sm_occupancy"][i]))
+        slow, tput = shared_performance(
+            p_arr, OFFLINE_MODEL_PROFILES[models[midx[i]]], float(share[i]))
+        assert slow == slow_v[i] and tput == tput_v[i]
+
+
+def test_qps_bank_matches_scalar_curves():
+    from repro.core.traces import QPSBank
+
+    rng = np.random.default_rng(5)
+    curves = [OnlineQPS(rng) for _ in range(64)]
+    bank = QPSBank(curves)
+    for t in (0.0, 333.0, 7200.0, 50000.0, 86399.0, 100000.0):
+        v = bank.qps(t)
+        for i in (0, 13, 63):
+            # same math up to libm-vs-numpy sin ULPs
+            assert v[i] == pytest.approx(curves[i].qps(t), rel=1e-12, abs=1e-9)

@@ -86,3 +86,27 @@ def test_interference_matches_fig4():
     t10 = shared_performance(on, off, 0.1)[1]
     t90 = shared_performance(on, off, 0.9)[1]
     assert t90 / max(t10, 1e-9) > 5.0
+
+
+def test_cached_predictor_memoizes_and_stays_close(trained):
+    from repro.core.predictor import CachedSpeedPredictor
+
+    params, _ = trained
+    pred = SpeedPredictor({"T4": params})
+    cached = CachedSpeedPredictor(pred, quantum=0.01)
+    rng = np.random.default_rng(0)
+    feats = rng.uniform(0, 1, (256, 9)).astype(np.float32)
+    a = cached.predict("T4", feats)
+    assert cached.misses > 0 and cached.hits == 0
+    b = cached.predict("T4", feats)          # identical batch: all hits
+    assert cached.hits == 256
+    np.testing.assert_array_equal(a, b)
+    exact = pred.predict("T4", feats)
+    assert float(np.max(np.abs(a - exact))) < 0.05   # quantization is gentle
+    # the scheduler runs unchanged on the cached predictor
+    slots = [OnlineSlot(i, "T4", online_profile("recommend", 20.0 + i))
+             for i in range(4)]
+    jobs = [OfflineJob(j, OFFLINE_MODEL_PROFILES[m], 3600.0)
+            for j, m in enumerate(OFFLINE_MODEL_PROFILES)]
+    out = schedule(slots, jobs, cached)
+    assert len(out) > 0

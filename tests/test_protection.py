@@ -1,6 +1,6 @@
 """xCUDA analogue: GPU-load law (Eq. 1–2), PID stability, quota ledger."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.protection import (ClockFactorConfig, KernelThrottle,
                                    MemoryQuota, PIDConfig, PIDController,

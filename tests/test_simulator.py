@@ -68,7 +68,7 @@ def test_propagation_without_mechanism(predictor):
 def test_job_conservation(predictor):
     sim = ClusterSim(SimConfig(policy="muxflow", **FAST), predictor)
     r = sim.run()
-    running = sum(1 for d in sim.devices if d.job is not None)
+    running = int(sim.state.has_job.sum())
     accounted = r.n_finished + running + len(sim.pending)
     # jobs not yet submitted by the horizon also count
     unsubmitted = sum(1 for j in sim.jobs if j.submit_s > sim.cfg.horizon_s)

@@ -1,5 +1,5 @@
 """SysMonitor state machine: transitions, eviction, exponential re-admission."""
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.protection import DeviceTelemetry
 from repro.core.sysmonitor import GPUState, SysMonitor
@@ -100,3 +100,37 @@ def test_invariants_random_walk(samples):
         prev = s
         t += 1.0
     assert evicts == entries
+
+
+def test_vector_monitor_matches_scalar_fleet():
+    """VectorSysMonitor replicates the scalar state machine device-for-device
+    over a random telemetry walk (including devices skipping samples, as the
+    simulator does for failed hardware)."""
+    import numpy as np
+
+    from repro.core.sysmonitor import VectorSysMonitor
+
+    n, steps, dt = 24, 400, 30.0
+    rng = np.random.default_rng(42)
+    scalars = [SysMonitor(now=0.0) for _ in range(n)]
+    vec = VectorSysMonitor(n, now=0.0)
+    for k in range(steps):
+        now = k * dt
+        util = rng.uniform(0.5, 1.0, n)
+        sm = rng.uniform(0.4, 1.0, n)
+        mem = rng.uniform(0.5, 1.0, n)
+        clock = rng.uniform(850.0, 1600.0, n)
+        temp = rng.uniform(60.0, 95.0, n)
+        active = rng.random(n) > 0.1
+        level = vec.classify(util, sm, mem, clock, temp)
+        evict_vec = vec.update(level, now, active)
+        for i in range(n):
+            if not active[i]:
+                continue
+            m = tele(now, util=util[i], sm=sm[i], clock=clock[i], mem=mem[i],
+                     temp=temp[i])
+            state, events = scalars[i].update(m, now)
+            assert vec.states()[i] == state, (k, i)
+            assert bool(evict_vec[i]) == ("evict" in events), (k, i)
+        assert all(bool(vec.schedulable[i]) == scalars[i].schedulable
+                   for i in range(n))
