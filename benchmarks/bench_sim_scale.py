@@ -57,6 +57,23 @@ def bench_cell(policy: str, n_devices: int, predictor, *, horizon_s: float,
     }
 
 
+def bench_scenario(name: str, *, n_devices: int, hours: float,
+                   seed: int = 0) -> None:
+    """Control-plane overhead cell: a full scenario (events, agents, faults,
+    autoscaling, JSON report) vs the raw engine's ticks/s."""
+    from repro.cluster import run_scenario
+    t0 = time.perf_counter()
+    rep = run_scenario(name, n_devices=n_devices, hours=hours, seed=seed)
+    wall = time.perf_counter() - t0
+    n_ticks = int(hours * 3600.0 / rep["scenario"]["tick_s"])
+    emit(f"simscale_scenario_{name}_n{n_devices}", wall * 1e6,
+         f"{n_ticks / max(wall, 1e-9):.1f}ticks/s;"
+         f"events={rep['events']['n_events']};"
+         f"done={rep['jobs']['completed']}/{rep['jobs']['n_jobs']};"
+         f"faults={rep['faults']['injected'] if rep['faults'] else 0};"
+         f"digest={rep['events']['digest'][:8]}")
+
+
 def sweep(devices, policies, *, horizon_s, tick_s, trace, predictor) -> int:
     failures = 0
     for n in devices:
@@ -106,6 +123,10 @@ def main(argv=None) -> int:
     emit("simscale_predictor_train", (time.perf_counter() - t0) * 1e6, "")
     failures = sweep(devices, policies, horizon_s=horizon_s, tick_s=tick_s,
                      trace=args.trace, predictor=predictor)
+    if args.smoke:
+        bench_scenario("smoke", n_devices=64, hours=0.5)
+    else:
+        bench_scenario("diurnal-mixed", n_devices=max(devices), hours=2.0)
     return 1 if failures else 0
 
 

@@ -7,7 +7,9 @@ from __future__ import annotations
 
 import time
 
-from repro.core.simulator import run_policy
+# rides the repro.cluster control plane (neutral passthrough: same
+# engine + RNG stream as repro.core.simulator.run_policy)
+from repro.cluster.control import run_policy_scenario as run_policy
 from .bench_lib import emit
 from .predictor_cache import get_predictor
 

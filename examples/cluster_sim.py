@@ -1,11 +1,14 @@
 """Cluster-scale example: the full MuxFlow control plane on a simulated
-200-GPU inference cluster — matching-based scheduling, SysMonitor eviction,
-mixed error handling, checkpoint/restart — against the paper's baselines.
+GPU cluster — matching-based scheduling, SysMonitor eviction, mixed error
+handling, checkpoint/restart — against the paper's baselines, then a full
+control-plane scenario (heterogeneous fleet, fault campaign, node agents,
+autoscaling) through `repro.cluster`.
 
   PYTHONPATH=src python examples/cluster_sim.py
 """
+from repro.cluster import run_scenario
+from repro.cluster.control import run_policy_scenario
 from repro.core.predictor import build_speed_predictor
-from repro.core.simulator import run_policy
 
 
 def main() -> None:
@@ -13,7 +16,7 @@ def main() -> None:
     pred = build_speed_predictor(gpu_types=("T4", "A10"), n=1200, epochs=50)
     cfg = dict(n_devices=200, horizon_s=8 * 3600.0, tick_s=60.0, trace="C",
                seed=0)
-    print(f"simulating 8h on 200 GPUs, trace C...\n")
+    print("simulating 8h on 200 GPUs, trace C...\n")
     header = (f"{'policy':18s} {'online slow':>11s} {'p99 ms':>8s} "
               f"{'avg JCT':>9s} {'done':>9s} {'oversold':>8s} "
               f"{'util':>5s} {'evict%':>6s} {'err prop':>8s}")
@@ -21,13 +24,31 @@ def main() -> None:
     print("-" * len(header))
     for pol in ("online-only", "muxflow", "muxflow-s", "muxflow-m",
                 "muxflow-s-m", "pb-time-sharing", "time-sharing"):
-        r = run_policy(pol, pred if pol.startswith("muxflow") else None, **cfg)
+        r = run_policy_scenario(
+            pol, pred if pol.startswith("muxflow") else None, **cfg)
         print(f"{pol:18s} {r.avg_slowdown:>10.3f}x {r.p99_latency_ms:>8.1f} "
               f"{r.avg_jct_s/60:>7.1f}mn {r.n_finished:>4d}/{r.n_jobs:<4d} "
               f"{r.oversold_gpu:>8.3f} {r.gpu_util:>5.2f} "
               f"{100*r.eviction_frac:>5.1f}% {r.errors_propagated:>3d}/{r.errors_injected:<3d}")
     print("\nMuxFlow: highest oversold GPU at <20% online slowdown, "
           "zero error propagation (graceful exit).")
+
+    print("\nfull control-plane campaign: diurnal-mixed on 200 devices, 4h")
+    rep = run_scenario("diurnal-mixed", n_devices=200, hours=4.0, seed=0)
+    s, j, f, a = rep["sim"], rep["jobs"], rep["faults"], rep["agents"]
+    print(f"  jobs     : {j['completed']}/{j['n_jobs']} done, "
+          f"{j['total_preemptions']} preemptions, "
+          f"avg queue wait {j['avg_queue_wait_s']:.0f}s, "
+          f"lost work {j['total_lost_work_s']:.0f}s")
+    print(f"  faults   : {f['injected']} injected, {f['propagated']} "
+          f"propagated (rate {f['propagation_rate']:.3f})")
+    print(f"  agents   : {a['reports_dropped']} heartbeats dropped, "
+          f"{a['stale_episodes']} stale episodes")
+    print(f"  autoscale: {rep['autoscaler']['n_decisions']} decisions")
+    print(f"  events   : {rep['events']['n_events']} "
+          f"(digest {rep['events']['digest'][:12]}...)")
+    print(f"  pools    : " + ", ".join(
+        f"{p['pool']}={p['n']}" for p in rep["pools"]))
 
 
 if __name__ == "__main__":

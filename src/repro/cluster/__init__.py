@@ -1,0 +1,30 @@
+"""repro.cluster — the event-driven cluster control plane (§5).
+
+Layers the paper's deployment loop over the vectorized
+:class:`repro.core.simulator.ClusterSim` engine:
+
+* :mod:`repro.cluster.events` — typed events + deterministic event bus;
+* :mod:`repro.cluster.agents` — per-device NodeAgent heartbeats/staleness
+  wrapping SysMonitor, dynamic-SM, and throttle telemetry;
+* :mod:`repro.cluster.jobs` — the offline-job lifecycle state machine
+  (submit → queue → place → run → checkpoint → preempt → requeue/complete);
+* :mod:`repro.cluster.faults` — fault campaigns injecting the §4.2
+  ErrorKind mix through the mixed error handler;
+* :mod:`repro.cluster.fleet` — heterogeneous GPU pools;
+* :mod:`repro.cluster.scenario` — named, seeded, replayable scenario specs;
+* :mod:`repro.cluster.control` — the ControlPlane that owns the tick loop;
+* ``python -m repro.cluster.run`` — the scenario-runner CLI.
+"""
+from repro.cluster.control import ControlPlane, run_scenario
+from repro.cluster.events import Event, EventBus, EventKind
+from repro.cluster.faults import FaultCampaign, FaultCampaignConfig
+from repro.cluster.fleet import FleetSpec, GPUPool
+from repro.cluster.jobs import JobManager, JobState, LifecycleError
+from repro.cluster.scenario import SCENARIOS, Scenario, scenario_by_name
+
+__all__ = [
+    "ControlPlane", "run_scenario", "Event", "EventBus", "EventKind",
+    "FaultCampaign", "FaultCampaignConfig", "FleetSpec", "GPUPool",
+    "JobManager", "JobState", "LifecycleError", "SCENARIOS", "Scenario",
+    "scenario_by_name",
+]

@@ -1,0 +1,306 @@
+"""The ControlPlane: owns the tick loop and wires every §5 deployment piece.
+
+Layering (control plane ⇄ sim core)::
+
+    Scenario ──► ControlPlane ──────────────────────────────┐
+                   │  per tick, in order:                   │
+                   │   1. submit due jobs  (JobManager)     │
+                   │   2. inject faults    (FaultCampaign)  │
+                   │   3. agent heartbeats (NodeAgentFleet) │──► EventBus
+                   │   4. autoscale online pools            │     │
+                   │   5. ClusterSim.step(t)  ◄─ SimHooks ──┘     ▼
+                   │        (vectorized engine tick)         JSON report
+                   └─► ClusterSim.finalize(t)
+
+The engine stays a pure vectorized core; everything event-shaped lives up
+here.  With all control-plane features neutral (no campaign, no heartbeat
+drops, trace-driven jobs) the trajectory is identical to ``ClusterSim.run``
+— that passthrough is what lets the figure benchmarks ride the same entry
+point without renumbering.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cluster.agents import NodeAgentFleet
+from repro.cluster.events import EventBus, EventKind
+from repro.cluster.faults import FaultCampaign
+from repro.cluster.fleet import FleetSpec
+from repro.cluster.jobs import JobManager
+from repro.cluster.scenario import Scenario, scenario_by_name
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.interference import ONLINE_SERVICE_PROFILES
+from repro.core.simulator import ClusterSim, SimConfig, SimHooks
+from repro.core.traces import SERVICES, make_trace
+
+REPORT_SCHEMA = "repro.cluster.report/v1"
+
+
+class _HookAdapter(SimHooks):
+    """Translates engine hook callbacks into bus events."""
+
+    def __init__(self, cp: "ControlPlane"):
+        self.cp = cp
+
+    def on_job_start(self, sim, t, device, spec, share):
+        self.cp.bus.emit(t, EventKind.JOB_START, device=device,
+                         job=spec.job_id,
+                         data=(("model", spec.model),
+                               ("share", round(share, 4))))
+
+    def on_job_finish(self, sim, t, device, spec, jct_s, wall_s, progress_s):
+        self.cp.bus.emit(t, EventKind.JOB_FINISH, device=device,
+                         job=spec.job_id,
+                         data=(("jct_s", round(jct_s, 3)),
+                               ("wall_s", round(wall_s, 3))))
+
+    def on_job_evict(self, sim, t, device, spec, reason, progress_s,
+                     checkpoint_s, requeued):
+        self.cp.bus.emit(t, EventKind.JOB_EVICT, device=device,
+                         job=spec.job_id,
+                         data=(("reason", reason),
+                               ("progress_s", round(progress_s, 3)),
+                               ("checkpoint_s", round(checkpoint_s, 3)),
+                               ("requeued", requeued)))
+
+    def on_error(self, sim, t, device, handled):
+        self.cp.bus.emit(t, EventKind.ERROR, device=device,
+                         data=(("kind", handled.kind.value),
+                               ("action", handled.action.value),
+                               ("propagated", handled.propagated)))
+
+    def on_device_fail(self, sim, t, device, until):
+        self.cp.bus.emit(t, EventKind.DEVICE_FAIL, device=device,
+                         data=(("until", round(until, 3)),))
+
+    def on_schedule(self, sim, t, n_free, n_pending_before, n_assigned,
+                    wall_s):
+        # wall_s deliberately excluded: events must be bit-reproducible
+        self.cp.bus.emit(t, EventKind.SCHEDULE,
+                         data=(("free", n_free),
+                               ("pending", n_pending_before),
+                               ("assigned", n_assigned)))
+
+    def on_tick_end(self, sim, t, telemetry):
+        self.cp.last_telemetry = telemetry
+
+
+class ControlPlane:
+    """Discrete-event control plane over the vectorized engine."""
+
+    def __init__(self, scenario: Scenario, predictor=None):
+        sc = scenario
+        self.scenario = sc
+        self.bus = EventBus(keep_log=sc.keep_event_log)
+        self.fleet = FleetSpec(sc.n_devices, sc.pools) if sc.pools else None
+        if predictor is None and sc.policy.startswith("muxflow"):
+            from repro.core.predictor import build_speed_predictor
+            gpu_types = (self.fleet.gpu_types if self.fleet
+                         else tuple(dict.fromkeys(sc.gpu_types)))
+            predictor = build_speed_predictor(
+                gpu_types=gpu_types, n=sc.predictor_samples,
+                epochs=sc.predictor_epochs, seed=0)
+        cfg = SimConfig(
+            policy=sc.policy, n_devices=sc.n_devices,
+            horizon_s=sc.horizon_seconds(), tick_s=sc.tick_s,
+            schedule_interval_s=sc.schedule_interval_s,
+            checkpoint_interval_s=sc.checkpoint_interval_s,
+            restart_delay_s=sc.restart_delay_s, trace=sc.trace,
+            seed=sc.seed, gpu_types=tuple(sc.gpu_types),
+            graceful_exit=sc.graceful_exit,
+            error_rate_per_job_hour=sc.error_rate_per_job_hour,
+            device_mtbf_h=sc.device_mtbf_h,
+            device_repair_s=sc.device_repair_s,
+            online_outage_s=sc.online_outage_s,
+            memory_quota=sc.memory_quota, shard_size=sc.shard_size,
+            predictor_cache_quantum=sc.predictor_cache_quantum)
+        self.sim = ClusterSim(cfg, predictor, fleet=self.fleet,
+                              hooks=_HookAdapter(self),
+                              external_jobs=sc.external_jobs)
+        # lifecycle tracking needs control-plane-submitted jobs (the engine's
+        # internal trace mode never emits JOB_SUBMIT)
+        self.job_manager = (JobManager(self.bus,
+                                       restart_delay_s=cfg.restart_delay_s,
+                                       strict=sc.strict_lifecycle)
+                            if sc.external_jobs else None)
+        # trace generated up here when jobs are control-plane-submitted;
+        # same generator/seed the engine itself would use, so a scenario is
+        # comparable against a plain ClusterSim run of the same config
+        self.trace_jobs = (make_trace(sc.trace, sc.n_devices,
+                                      cfg.horizon_s, sc.seed)
+                           if sc.external_jobs else [])
+        self._trace_i = 0
+        # derived, decoupled seeds: campaign/agent randomness never touches
+        # the engine's trace/failure RNG stream
+        self.campaign = (FaultCampaign(sc.faults, self.sim,
+                                       seed=sc.seed * 7919 + 1)
+                         if sc.faults is not None else None)
+        self.agents = (NodeAgentFleet(sc.n_devices, sc.agents,
+                                      seed=sc.seed * 104729 + 2,
+                                      bus=self.bus)
+                       if sc.agents is not None else None)
+        self.scalers: dict[str, Autoscaler] = {}
+        self.autoscale_decisions: list[dict] = []
+        if sc.autoscale:
+            for si, svc in enumerate(SERVICES):
+                n_svc = int((self.sim.service_idx == si).sum())
+                if n_svc == 0:
+                    continue
+                self.scalers[svc] = Autoscaler(
+                    AutoscalerConfig(min_replicas=max(1, n_svc // 4),
+                                     max_replicas=n_svc),
+                    replicas=max(1, int(n_svc * 0.6)),
+                    qps_capacity_per_replica=(
+                        ONLINE_SERVICE_PROFILES[svc]["qps_capacity"]))
+        self.last_telemetry: dict = {}
+        self.results = None
+        self._t_end = 0.0
+
+    # ------------------------------------------------------------------ run
+    def run(self):
+        """Drive the full scenario; returns the engine's SimResults (the
+        JSON report comes from :meth:`report`)."""
+        sc = self.scenario
+        sim = self.sim
+        t = 0.0
+        n_ticks = int(sc.horizon_seconds() / sc.tick_s)
+        for _ in range(n_ticks):
+            self._submit_due(t)
+            if self.campaign is not None:
+                self.campaign.inject(t, sc.tick_s)
+            if self.agents is not None:
+                fresh = self.agents.observe(sim, t, self.last_telemetry)
+                sim.set_schedulable_mask(fresh)
+            if self.scalers:
+                self._autoscale(t)
+            t = sim.step(t)
+        self._t_end = t
+        self.results = sim.finalize(t)
+        return self.results
+
+    def _submit_due(self, t: float) -> None:
+        due = []
+        while (self._trace_i < len(self.trace_jobs)
+               and self.trace_jobs[self._trace_i].submit_s <= t):
+            spec = self.trace_jobs[self._trace_i]
+            self._trace_i += 1
+            due.append(spec)
+            self.bus.emit(t, EventKind.JOB_SUBMIT, job=spec.job_id,
+                          data=(("model", spec.model),
+                                ("duration_s", round(spec.duration_s, 3))))
+        if due:
+            self.sim.inject_jobs(due)
+
+    def _autoscale(self, t: float) -> None:
+        sim = self.sim
+        qps = sim.qps_bank.qps(t)
+        for si, svc in enumerate(SERVICES):
+            scaler = self.scalers.get(svc)
+            if scaler is None:
+                continue
+            mask = sim.service_idx == si
+            dec = scaler.observe(float(qps[mask].sum()), t)
+            if dec is None:
+                continue
+            self.bus.emit(t, EventKind.AUTOSCALE,
+                          data=(("service", svc),
+                                ("replicas", dec.replicas),
+                                ("delta", dec.delta),
+                                ("reason", dec.reason)))
+            self.autoscale_decisions.append(
+                {"t": t, "service": svc, "replicas": dec.replicas,
+                 "delta": dec.delta, "reason": dec.reason})
+            if dec.delta > 0:
+                # scale-up: online capacity wins — evict the offline
+                # partners on this service's devices to free them
+                busy = np.flatnonzero(mask & sim.state.has_job)
+                for i in busy[:dec.delta]:
+                    sim.evict_device(int(i), t, reason="autoscale")
+
+    # --------------------------------------------------------------- report
+    def report(self) -> dict:
+        """Deterministic JSON-ready campaign report (no wall-clock fields)."""
+        if self.results is None:
+            raise RuntimeError("run() the scenario before report()")
+        sc = self.scenario
+        rep = {
+            "schema": REPORT_SCHEMA,
+            "scenario": sc.to_dict(),
+            "sim": dataclasses.asdict(self.results),
+            "jobs": (self.job_manager.summary()
+                     if self.job_manager is not None else None),
+            "faults": (self.campaign.summary()
+                       if self.campaign is not None else None),
+            "agents": (self.agents.summary()
+                       if self.agents is not None else None),
+            "autoscaler": ({"n_decisions": len(self.autoscale_decisions),
+                            "decisions": self.autoscale_decisions,
+                            "replicas": {svc: s.replicas for svc, s in
+                                         sorted(self.scalers.items())}}
+                           if self.scalers else None),
+            "pools": self.sim.pool_view(self._t_end),
+            "events": self.bus.summary(),
+        }
+        return jsonify(rep)
+
+
+def jsonify(obj):
+    """Recursively convert numpy scalars/arrays so json.dumps round-trips."""
+    if isinstance(obj, dict):
+        return {k: jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonify(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [jsonify(v) for v in obj.tolist()]
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+def run_scenario(name_or_scenario, predictor=None, **overrides) -> dict:
+    """Build, run, and report a scenario in one call.
+
+    ``name_or_scenario`` is a registry name or a :class:`Scenario`;
+    ``overrides`` replace scenario fields (None values are ignored)."""
+    sc = (scenario_by_name(name_or_scenario)
+          if isinstance(name_or_scenario, str) else name_or_scenario)
+    sc = sc.with_overrides(**overrides)
+    cp = ControlPlane(sc, predictor=predictor)
+    cp.run()
+    return cp.report()
+
+
+def run_policy_scenario(policy: str, predictor=None, **sim_overrides):
+    """Neutral passthrough for the figure benchmarks: run one policy through
+    the control plane with every scenario feature off — the trajectory is
+    identical to ``repro.core.simulator.run_policy`` (same engine, same RNG
+    stream, trace-driven jobs, no campaign/agent/autoscale interference) but
+    rides the ControlPlane entry point and yields its event stream."""
+    cfg = SimConfig(policy=policy, **sim_overrides)
+    # every SimConfig knob maps onto a Scenario field — nothing the caller
+    # passes can be silently dropped on the way into the ControlPlane
+    sc = Scenario(
+        name=f"policy:{policy}", policy=policy, n_devices=cfg.n_devices,
+        hours=cfg.horizon_s / 3600.0, horizon_s=cfg.horizon_s,
+        tick_s=cfg.tick_s,
+        schedule_interval_s=cfg.schedule_interval_s,
+        checkpoint_interval_s=cfg.checkpoint_interval_s,
+        restart_delay_s=cfg.restart_delay_s, trace=cfg.trace,
+        seed=cfg.seed, gpu_types=tuple(cfg.gpu_types),
+        graceful_exit=cfg.graceful_exit,
+        error_rate_per_job_hour=cfg.error_rate_per_job_hour,
+        device_mtbf_h=cfg.device_mtbf_h,
+        device_repair_s=cfg.device_repair_s,
+        online_outage_s=cfg.online_outage_s, memory_quota=cfg.memory_quota,
+        shard_size=cfg.shard_size,
+        predictor_cache_quantum=cfg.predictor_cache_quantum,
+        pools=(), faults=None, agents=None, autoscale=False,
+        external_jobs=False)
+    cp = ControlPlane(sc, predictor=predictor)
+    return cp.run()

@@ -1,0 +1,114 @@
+"""Scenario-runner CLI for the cluster control plane.
+
+  PYTHONPATH=src python -m repro.cluster.run --list
+  PYTHONPATH=src python -m repro.cluster.run --scenario smoke
+  PYTHONPATH=src python -m repro.cluster.run --scenario diurnal-mixed \
+      --devices 20000 --hours 12 --seed 0 --out report.json
+  PYTHONPATH=src python -m repro.cluster.run --scenario fault-storm \
+      --no-graceful-exit --devices 500 --hours 2
+  PYTHONPATH=src python -m repro.cluster.run --check-schema report.json
+
+Reports are deterministic JSON (no wall-clock fields): the same scenario,
+devices, hours, and seed always produce byte-identical output.  Timing goes
+to stderr.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.cluster.control import REPORT_SCHEMA, run_scenario
+from repro.cluster.scenario import SCENARIOS, scenario_by_name
+
+# top-level keys every v1 report must carry (None allowed for unused parts)
+SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
+               "autoscaler", "pools", "events")
+
+
+def check_schema(report: dict) -> list[str]:
+    """Validate the v1 report shape; returns a list of problems (empty=ok)."""
+    problems = []
+    if report.get("schema") != REPORT_SCHEMA:
+        problems.append(f"schema != {REPORT_SCHEMA!r}: "
+                        f"{report.get('schema')!r}")
+    for k in SCHEMA_KEYS:
+        if k not in report:
+            problems.append(f"missing key {k!r}")
+    ev = report.get("events") or {}
+    for k in ("n_events", "counts", "digest"):
+        if k not in ev:
+            problems.append(f"events missing {k!r}")
+    sim = report.get("sim") or {}
+    for k in ("policy", "n_jobs", "n_finished", "avg_slowdown",
+              "errors_injected", "errors_propagated"):
+        if k not in sim:
+            problems.append(f"sim missing {k!r}")
+    if not isinstance(report.get("pools"), list) or not report["pools"]:
+        problems.append("pools missing or empty")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cluster.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--scenario", default="smoke",
+                    help="registry name (see --list)")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--hours", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--tick", type=float, default=None)
+    gx = ap.add_mutually_exclusive_group()
+    gx.add_argument("--graceful-exit", dest="graceful", action="store_true",
+                    default=None)
+    gx.add_argument("--no-graceful-exit", dest="graceful",
+                    action="store_false")
+    ap.add_argument("--out", default=None, help="write report JSON here "
+                    "(default: stdout)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
+                    help="validate an existing report file and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, sc in sorted(SCENARIOS.items()):
+            print(f"{name:16s} {sc.description}")
+        return 0
+    if args.check_schema:
+        with open(args.check_schema) as f:
+            problems = check_schema(json.load(f))
+        for p in problems:
+            print(f"SCHEMA: {p}", file=sys.stderr)
+        print("schema " + ("FAIL" if problems else "OK"), file=sys.stderr)
+        return 1 if problems else 0
+
+    sc = scenario_by_name(args.scenario)
+    t0 = time.perf_counter()
+    report = run_scenario(
+        sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
+        policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful)
+    wall = time.perf_counter() - t0
+    out = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(out)
+    s = report["sim"]
+    print(f"[{sc.name}] {s['policy']} n={report['scenario']['n_devices']} "
+          f"{report['scenario']['hours']}h: finished "
+          f"{s['n_finished']}/{s['n_jobs']} jobs, slowdown "
+          f"{s['avg_slowdown']:.3f}x, errors {s['errors_propagated']}"
+          f"/{s['errors_injected']} propagated, "
+          f"{report['events']['n_events']} events "
+          f"({wall:.1f}s wall)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

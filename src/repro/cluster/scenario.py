@@ -1,0 +1,136 @@
+"""Named, seeded, replayable scenario specs for the control plane.
+
+A :class:`Scenario` composes everything a campaign needs — policy, fleet
+pools, trace, fault campaign, agent behavior, autoscaling — into one
+declarative record.  The same (scenario, seed) pair always produces the same
+JSON report bit-for-bit; the registry holds the canonical campaigns the
+benchmarks and CI run, and the CLI (``python -m repro.cluster.run``) can
+override the headline knobs (devices/hours/seed/policy/graceful-exit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cluster.agents import AgentConfig
+from repro.cluster.faults import FaultCampaignConfig
+from repro.cluster.fleet import GPUPool
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str = ""
+    policy: str = "muxflow"
+    n_devices: int = 200
+    hours: float = 12.0
+    horizon_s: float | None = None    # exact horizon; overrides hours when
+                                      # hours*3600 would not round-trip
+    tick_s: float = 30.0
+    schedule_interval_s: float = 900.0
+    trace: str = "B"
+    seed: int = 0
+    graceful_exit: bool = True
+    error_rate_per_job_hour: float = 0.05
+    device_mtbf_h: float = 4000.0
+    device_repair_s: float = 1800.0
+    checkpoint_interval_s: float = 300.0
+    restart_delay_s: float = 90.0
+    online_outage_s: float = 120.0
+    memory_quota: float = 0.4
+    gpu_types: tuple = ("T4", "T4", "T4", "A10")   # used when pools == ()
+    shard_size: int = 256
+    predictor_cache_quantum: float = 0.02
+    predictor_samples: int = 300
+    predictor_epochs: int = 12
+    pools: tuple[GPUPool, ...] = ()         # () -> homogeneous default fleet
+    faults: FaultCampaignConfig | None = None
+    agents: AgentConfig | None = dataclasses.field(
+        default_factory=AgentConfig)
+    autoscale: bool = False
+    external_jobs: bool = True              # submit via the control plane
+    keep_event_log: bool = False
+    strict_lifecycle: bool = True
+
+    def horizon_seconds(self) -> float:
+        return (self.horizon_s if self.horizon_s is not None
+                else self.hours * 3600.0)
+
+    def with_overrides(self, **kw) -> "Scenario":
+        kw = {k: v for k, v in kw.items() if v is not None}
+        if "hours" in kw:
+            # an hours override supersedes any exact-horizon pin
+            kw["horizon_s"] = None
+        return dataclasses.replace(self, **kw) if kw else self
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["pools"] = [p.to_dict() for p in self.pools]
+        return d
+
+
+_HETERO_POOLS = (
+    GPUPool("t4", "T4", weight=0.60, speed=1.0, hbm_gb=16.0),
+    GPUPool("a10", "A10", weight=0.25, speed=1.35, hbm_gb=24.0),
+    GPUPool("a100", "A100", weight=0.15, speed=2.60, hbm_gb=40.0),
+)
+
+_TIGHT_POOLS = (
+    GPUPool("small-hbm", "T4", weight=0.5, speed=1.0, hbm_gb=12.0),
+    GPUPool("t4", "T4", weight=0.3, speed=1.0, hbm_gb=16.0),
+    GPUPool("a10", "A10", weight=0.2, speed=1.35, hbm_gb=24.0),
+)
+
+SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
+    Scenario(
+        name="smoke",
+        description="Tiny CI scenario: every control-plane feature on, "
+                    "event log retained.",
+        n_devices=64, hours=1.0, trace="C",
+        pools=_HETERO_POOLS,
+        faults=FaultCampaignConfig(rate_per_device_hour=0.5),
+        agents=AgentConfig(drop_rate=0.05),
+        autoscale=True, keep_event_log=True,
+        predictor_samples=150, predictor_epochs=5),
+    Scenario(
+        name="diurnal-mixed",
+        description="The flagship campaign: heterogeneous fleet under "
+                    "diurnal online load with a moderate fault campaign, "
+                    "flaky node agents, and online-pool autoscaling.",
+        trace="B", pools=_HETERO_POOLS,
+        faults=FaultCampaignConfig(
+            rate_per_device_hour=0.02,
+            pool_rates=(("a100", 0.05),)),       # new silicon fails more
+        agents=AgentConfig(drop_rate=0.01),
+        autoscale=True),
+    Scenario(
+        name="fault-storm",
+        description="§4.2 propagation study: the campaign drives all "
+                    "errors (engine's own error process off) at storm "
+                    "rates; toggle --no-graceful-exit to reproduce the "
+                    "unprotected baseline.",
+        trace="B", error_rate_per_job_hour=0.0,
+        faults=FaultCampaignConfig(rate_per_device_hour=1.0),
+        agents=AgentConfig()),
+    Scenario(
+        name="hetero-fleet",
+        description="Heavy trace-D load on a fleet with an HBM-starved "
+                    "pool: per-pool memory feasibility shapes placement.",
+        trace="D", pools=_TIGHT_POOLS,
+        agents=AgentConfig()),
+    Scenario(
+        name="agent-churn",
+        description="Flaky DeviceProbe/SysMonitor daemons: 15% heartbeat "
+                    "drops shrink the schedulable set; measures lifecycle "
+                    "impact of control-plane staleness.",
+        trace="C",
+        agents=AgentConfig(drop_rate=0.15, stale_after=2.0)),
+)}
+
+
+def scenario_by_name(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
+        ) from None

@@ -91,6 +91,10 @@ class Multiplexer:
         self.stats = MuxStats(base_ms=base_step_s * 1e3)
         self._latencies: list[float] = []
         self._violations = 0
+        # callers may install a GracefulExit wired with their own
+        # checkpoint/release callbacks (examples/serve_multiplex.py); the
+        # run loop falls back to a bare freeze-only harness otherwise
+        self.graceful: GracefulExit | None = None
 
     def run(self, arrivals: list[float], horizon_s: float,
             max_offline_steps: int | None = None) -> MuxStats:
@@ -103,7 +107,9 @@ class Multiplexer:
         i = 0
         offline_steps = 0
         duty_acc = duty_n = 0.0
-        gex = GracefulExit(throttle=self.throttle)
+        gex = self.graceful or GracefulExit(throttle=self.throttle)
+        if gex.throttle is None:
+            gex.throttle = self.throttle
         with gex:
             while t < horizon_s:
                 while i < len(pending) and pending[i].arrival <= t:

@@ -68,6 +68,25 @@ def _sm_share(cfg: SchedulerConfig, online: WorkloadProfile) -> float:
     return fixed_sm(cfg.fixed_sm_share)
 
 
+def build_online_slots(free_idx, gpu_type: list[str], service_idx,
+                       on: dict, services: tuple[str, ...],
+                       ) -> list[OnlineSlot]:
+    """Materialize :class:`OnlineSlot` objects for the free devices of a
+    fleet from vectorized online-profile arrays (see
+    :func:`repro.core.interference.online_profile_arrays`).  Shared by the
+    simulator engine and the cluster control plane."""
+    return [
+        OnlineSlot(int(i), gpu_type[i], WorkloadProfile(
+            name=services[service_idx[i]],
+            gpu_util=float(on["gpu_util"][i]),
+            sm_activity=float(on["sm_activity"][i]),
+            sm_occupancy=float(on["sm_occupancy"][i]),
+            mem_bw=float(on["mem_bw"][i]),
+            exec_time_ms=float(on["exec_time_ms"][i]),
+            mem_bytes_frac=float(on["mem_bytes_frac"][i])))
+        for i in free_idx]
+
+
 def build_weight_grid(slots: list[OnlineSlot], jobs: list[OfflineJob],
                       predictor: SpeedPredictor, cfg: SchedulerConfig,
                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -29,19 +29,21 @@ import numpy as np
 
 from repro.core.errors import MixedErrorHandler, error_from_uniform
 from repro.core.interference import (OFFLINE_MODEL_PROFILES,
-                                     ONLINE_SERVICE_PROFILES, WorkloadProfile,
+                                     ONLINE_SERVICE_PROFILES,
                                      memory_feasible, online_profile,
                                      online_profile_arrays,
                                      shared_performance_arrays)
 from repro.core.predictor import CachedSpeedPredictor, SpeedPredictor
-from repro.core.scheduler import (OfflineJob, OnlineSlot, SchedulerConfig,
-                                  schedule)
+from repro.core.scheduler import (OfflineJob, SchedulerConfig,
+                                  build_online_slots, schedule)
 from repro.core.sysmonitor import VectorSysMonitor
 from repro.core.traces import (SERVICES, OfflineJobSpec, OnlineQPS, QPSBank,
                                make_trace)
 
 POLICIES = ("muxflow", "muxflow-s", "muxflow-m", "muxflow-s-m",
             "online-only", "time-sharing", "pb-time-sharing")
+
+DEFAULT_HBM_GB = 16.0     # T4-class device the workload profiles are scaled to
 
 _BASE_LATENCY_MS = {s: ONLINE_SERVICE_PROFILES[s]["base_latency_ms"]
                     for s in ONLINE_SERVICE_PROFILES}
@@ -102,6 +104,53 @@ class SimResults:
     timeline: dict = dataclasses.field(default_factory=dict)
 
 
+class SimHooks:
+    """Observation/control seam for the :mod:`repro.cluster` control plane.
+
+    Subclass and override any subset; every method is a no-op by default, and
+    the simulator only calls them when a hooks object is installed, so the
+    default (hook-less) run is byte-identical to the pre-hook engine.  All
+    callbacks receive the simulator itself so implementations can read fleet
+    state without the engine having to marshal it per event.
+    """
+
+    def on_job_start(self, sim: "ClusterSim", t: float, device: int,
+                     spec, share: float) -> None:
+        """An offline job was placed on ``device`` with SM share ``share``."""
+
+    def on_job_finish(self, sim: "ClusterSim", t: float, device: int,
+                      spec, jct_s: float, wall_s: float,
+                      progress_s: float) -> None:
+        """An offline job ran to completion."""
+
+    def on_job_evict(self, sim: "ClusterSim", t: float, device: int,
+                     spec, reason: str, progress_s: float,
+                     checkpoint_s: float, requeued: bool) -> None:
+        """An offline job was evicted (``reason`` in ``{"overlimit", "error",
+        "device_failure", "autoscale", "external"}``)."""
+
+    def on_error(self, sim: "ClusterSim", t: float, device: int,
+                 handled) -> None:
+        """An offline container error was injected (``handled`` is the
+        :class:`~repro.core.errors.HandledError`)."""
+
+    def on_device_fail(self, sim: "ClusterSim", t: float, device: int,
+                       until: float) -> None:
+        """A hardware failure took ``device`` down until ``until``."""
+
+    def on_schedule(self, sim: "ClusterSim", t: float, n_free: int,
+                    n_pending_before: int, n_assigned: int,
+                    wall_s: float) -> None:
+        """A scheduling round completed (``wall_s`` is real wall time)."""
+
+    def on_tick_end(self, sim: "ClusterSim", t: float,
+                    telemetry: dict) -> None:
+        """End of a tick; ``telemetry`` holds per-device arrays (qps,
+        gpu_util, sm_activity, mem_used, sm_clock, level, busy, active,
+        slowdown, tput).  Arrays are the engine's own buffers — copy what you
+        keep."""
+
+
 @dataclasses.dataclass
 class FleetState:
     """Struct-of-arrays device state — the vectorized engine's hot data."""
@@ -135,9 +184,12 @@ class FleetState:
 class ClusterSim:
     """Vectorized MuxFlow cluster simulator (paper-scale capable)."""
 
-    def __init__(self, cfg: SimConfig, predictor: SpeedPredictor | None = None):
+    def __init__(self, cfg: SimConfig, predictor: SpeedPredictor | None = None,
+                 *, fleet=None, hooks: SimHooks | None = None,
+                 external_jobs: bool = False):
         assert cfg.policy in POLICIES, cfg.policy
         self.cfg = cfg
+        self.hooks = hooks
         self.rng = np.random.default_rng(cfg.seed)
         if cfg.policy.startswith("muxflow") and predictor is None:
             raise ValueError("MuxFlow policies need a speed predictor")
@@ -151,10 +203,24 @@ class ClusterSim:
         self.qps_bank = QPSBank([OnlineQPS(self.rng) for _ in range(n)])
         self.service_idx = np.array([i % len(SERVICES) for i in range(n)],
                                     np.int64)
-        self.gpu_type = [cfg.gpu_types[i % len(cfg.gpu_types)]
-                         for i in range(n)]
-        self.speed = np.array([1.35 if t == "A10" else 1.0
-                               for t in self.gpu_type], np.float64)
+        if fleet is not None:
+            # heterogeneous fleet: duck-typed spec with per-device gpu_type /
+            # speed / hbm_gb and a pool partition (see repro.cluster.fleet)
+            assert len(fleet.gpu_type) == n, "fleet size != n_devices"
+            self.gpu_type = list(fleet.gpu_type)
+            self.speed = np.asarray(fleet.speed, np.float64)
+            self.pool_of = np.asarray(fleet.pool_of, np.int64)
+            self.pool_names = list(fleet.pool_names)
+            hbm = np.asarray(fleet.hbm_gb, np.float64)
+        else:
+            self.gpu_type = [cfg.gpu_types[i % len(cfg.gpu_types)]
+                             for i in range(n)]
+            self.speed = np.array([1.35 if t == "A10" else 1.0
+                                   for t in self.gpu_type], np.float64)
+            self.pool_of = np.zeros(n, np.int64)
+            self.pool_names = ["default"]
+            hbm = np.full(n, DEFAULT_HBM_GB, np.float64)
+        self.hbm_gb = hbm
         self.base_latency = np.array(
             [_BASE_LATENCY_MS[SERVICES[s]] for s in self.service_idx],
             np.float64)
@@ -173,13 +239,21 @@ class ClusterSim:
             "exec_time_ms": np.array([p.exec_time_ms for p in profs]),
             "mem_bytes_frac": np.array([p.mem_bytes_frac for p in profs]),
         }
-        # xCUDA memory-quota feasibility is per (service, model) — online and
-        # offline memory footprints are constants of the workload class
+        # xCUDA memory-quota feasibility per (pool, service, model) — memory
+        # footprint fractions are profiled on a DEFAULT_HBM_GB device, so a
+        # pool with more (less) HBM scales the fractions down (up)
+        pool_hbm = np.array([hbm[self.pool_of == p].mean() if
+                             (self.pool_of == p).any() else DEFAULT_HBM_GB
+                             for p in range(len(self.pool_names))])
         self.feasible = np.array(
-            [[memory_feasible(online_profile(svc, 50.0),
-                              OFFLINE_MODEL_PROFILES[m], cfg.memory_quota)
-              for m in self.models] for svc in SERVICES])
-        self.jobs = make_trace(cfg.trace, n, cfg.horizon_s, cfg.seed)
+            [[[memory_feasible(
+                self._scale_mem(online_profile(svc, 50.0), ph),
+                self._scale_mem(OFFLINE_MODEL_PROFILES[m], ph),
+                cfg.memory_quota)
+               for m in self.models] for svc in SERVICES]
+             for ph in pool_hbm])
+        self.jobs = ([] if external_jobs
+                     else make_trace(cfg.trace, n, cfg.horizon_s, cfg.seed))
         self.pending: list[OfflineJobSpec] = []
         self.err_handler = MixedErrorHandler(graceful_enabled=cfg.graceful_exit)
         self.finished: list[tuple] = []            # (spec, jct, wall, progress)
@@ -198,60 +272,146 @@ class ClusterSim:
                                            "mem": [], "slowdown": [], "tput": []}
         # instrumentation for the scale benchmarks
         self.schedule_latencies: list[float] = []
+        # step-loop state (the control plane drives ticks one at a time)
+        self._job_i = 0
+        self._next_sched = 0.0
+        self._n_injected = 0
+        self._ext_mask: np.ndarray | None = None
+
+    @staticmethod
+    def _scale_mem(profile, hbm_gb: float):
+        """Rescale a profile's memory fraction to a pool's HBM size."""
+        if hbm_gb == DEFAULT_HBM_GB:
+            return profile
+        return dataclasses.replace(
+            profile, mem_bytes_frac=min(
+                1.0, profile.mem_bytes_frac * DEFAULT_HBM_GB / hbm_gb))
 
     # ------------------------------------------------------------------ run
     def run(self) -> SimResults:
         cfg = self.cfg
         t = 0.0
-        job_i = 0
-        next_sched = 0.0
         n_ticks = int(cfg.horizon_s / cfg.tick_s)
         for _ in range(n_ticks):
-            while job_i < len(self.jobs) and self.jobs[job_i].submit_s <= t:
-                self.pending.append(self.jobs[job_i])
-                job_i += 1
-            if cfg.policy != "online-only" and t >= next_sched:
-                t0 = time.perf_counter()
-                self._schedule(t)
-                self.schedule_latencies.append(time.perf_counter() - t0)
-                next_sched = t + cfg.schedule_interval_s
-            self._tick(t)
-            t += cfg.tick_s
+            t = self.step(t)
         return self._results(t)
 
+    def step(self, t: float) -> float:
+        """Advance the engine one tick from time ``t``; returns the next tick
+        time.  External drivers (the :mod:`repro.cluster` control plane) call
+        this directly and interleave their own work between ticks."""
+        cfg = self.cfg
+        while (self._job_i < len(self.jobs)
+               and self.jobs[self._job_i].submit_s <= t):
+            self.pending.append(self.jobs[self._job_i])
+            self._job_i += 1
+        if cfg.policy != "online-only" and t >= self._next_sched:
+            t0 = time.perf_counter()
+            n_free, n_before = self._schedule(t)
+            wall = time.perf_counter() - t0
+            self.schedule_latencies.append(wall)
+            if self.hooks is not None:
+                self.hooks.on_schedule(self, t, n_free, n_before,
+                                       n_before - len(self.pending), wall)
+            self._next_sched = t + cfg.schedule_interval_s
+        self._tick(t)
+        return t + cfg.tick_s
+
+    # ------------------------------------------------- control-plane surface
+    def inject_jobs(self, specs: list[OfflineJobSpec]) -> None:
+        """Mid-run job submission (the control plane's JobManager path):
+        specs join the pending queue immediately and count toward n_jobs."""
+        self._n_injected += len(specs)
+        self.pending.extend(specs)
+
+    def force_error(self, i: int, t: float, kind):
+        """Inject a specific :class:`~repro.core.errors.ErrorKind` on busy
+        device ``i`` (fault-campaign entry point).  Routes through the mixed
+        error handler exactly like the engine's own error process; returns
+        the :class:`HandledError`, or None if the device has no offline job."""
+        if not self.state.has_job[i]:
+            return None
+        requeues: list[tuple[int, OfflineJobSpec]] = []
+        handled = self._handle_error(i, t, kind, requeues)
+        if requeues:
+            self.pending[:0] = [spec for _, spec in reversed(requeues)]
+        return handled
+
+    def evict_device(self, i: int, t: float, reason: str = "external",
+                     count: bool = True) -> None:
+        """Evict the offline job on device ``i`` (if any), requeueing it from
+        its last checkpoint.  Used by autoscaler scale-ups and fault
+        campaigns between ticks."""
+        requeues: list[tuple[int, OfflineJobSpec]] = []
+        self._evict(i, t, requeues, reason=reason, count=count)
+        if requeues:
+            self.pending[:0] = [spec for _, spec in reversed(requeues)]
+
+    def set_schedulable_mask(self, mask: np.ndarray | None) -> None:
+        """Extra per-device schedulability constraint ANDed into every
+        scheduling round (e.g. node-agent heartbeat staleness).  Pass None to
+        clear."""
+        self._ext_mask = mask
+
+    def pool_view(self, t: float) -> list[dict]:
+        """Per-pool state snapshot (counts + load) for the control plane."""
+        s = self.state
+        alive = s.failed_until <= t
+        qps = self.qps_bank.qps(t)
+        sched = self.monitor.schedulable
+        views = []
+        for p, name in enumerate(self.pool_names):
+            m = self.pool_of == p
+            busy = m & s.has_job
+            views.append({
+                "pool": name,
+                "n": int(m.sum()),
+                "alive": int((m & alive).sum()),
+                "busy": int(busy.sum()),
+                "schedulable": int((m & sched).sum()),
+                "mean_sm_share": (float(s.sm_share[busy].mean())
+                                  if busy.any() else 0.0),
+                "qps_sum": float(qps[m].sum()),
+                "hbm_gb": float(self.hbm_gb[m].mean()) if m.any() else 0.0,
+            })
+        return views
+
+    def finalize(self, t_end: float) -> SimResults:
+        """Aggregate results after an externally driven step loop."""
+        return self._results(t_end)
+
     # ------------------------------------------------------------- schedule
-    def _schedule(self, t: float) -> None:
+    def _schedule(self, t: float) -> tuple[int, int]:
+        """One scheduling round; returns (n_free, n_pending_before)."""
         cfg = self.cfg
         s = self.state
+        n_before = len(self.pending)
         if cfg.policy in ("time-sharing", "pb-time-sharing"):
             # greedy FIFO packing: any alive device without a job
-            free = np.flatnonzero(~s.has_job & (s.failed_until <= t))
+            ok = ~s.has_job & (s.failed_until <= t)
+            if self._ext_mask is not None:
+                ok &= self._ext_mask
+            free = np.flatnonzero(ok)
             for i in free[:len(self.pending)]:
                 self._start_job(int(i), self.pending.pop(0), 0.5, t)
-            return
+            return int(free.size), n_before
         if not self.pending:
-            return
+            return 0, n_before
         sched_cfg = SchedulerConfig(
             use_dynamic_sm=cfg.policy in ("muxflow", "muxflow-m"),
             use_matching=cfg.policy in ("muxflow", "muxflow-s"),
             shard_size=cfg.shard_size)
         # free healthy devices (the paper only schedules onto Healthy GPUs)
-        free = np.flatnonzero(~s.has_job & (s.failed_until <= t)
-                              & self.monitor.schedulable)
+        ok = ~s.has_job & (s.failed_until <= t) & self.monitor.schedulable
+        if self._ext_mask is not None:
+            ok &= self._ext_mask
+        free = np.flatnonzero(ok)
         if free.size == 0:
-            return
+            return 0, n_before
         qps = self.qps_bank.qps(t)
         on = online_profile_arrays(self.service_idx, qps, SERVICES)
-        slots = [
-            OnlineSlot(int(i), self.gpu_type[i], WorkloadProfile(
-                name=SERVICES[self.service_idx[i]],
-                gpu_util=float(on["gpu_util"][i]),
-                sm_activity=float(on["sm_activity"][i]),
-                sm_occupancy=float(on["sm_occupancy"][i]),
-                mem_bw=float(on["mem_bw"][i]),
-                exec_time_ms=float(on["exec_time_ms"][i]),
-                mem_bytes_frac=float(on["mem_bytes_frac"][i])))
-            for i in free]
+        slots = build_online_slots(free, self.gpu_type, self.service_idx,
+                                   on, SERVICES)
         jobs = [OfflineJob(sp.job_id, OFFLINE_MODEL_PROFILES[sp.model],
                            sp.duration_s) for sp in self.pending]
         assignments = schedule(slots, jobs, self.predictor, sched_cfg)
@@ -261,7 +421,8 @@ class ClusterSim:
             spec = by_job.get(a.job_id)
             if spec is None or a.job_id in assigned:
                 continue
-            if not self.feasible[self.service_idx[a.device_id],
+            if not self.feasible[self.pool_of[a.device_id],
+                                 self.service_idx[a.device_id],
                                  self.model_of[spec.model]]:
                 continue  # xCUDA memory quota rejects the pairing
             assigned.add(a.job_id)
@@ -269,6 +430,7 @@ class ClusterSim:
         if assigned:
             self.pending = [sp for sp in self.pending
                             if sp.job_id not in assigned]
+        return int(free.size), n_before
 
     def _start_job(self, i: int, spec: OfflineJobSpec, share: float,
                    t: float) -> None:
@@ -283,6 +445,8 @@ class ClusterSim:
         s.duration[i] = spec.duration_s
         self.job_spec[i] = spec
         self.executions += 1
+        if self.hooks is not None:
+            self.hooks.on_job_start(self, t, i, spec, share)
 
     # ----------------------------------------------------------------- tick
     def _tick(self, t: float) -> None:
@@ -298,7 +462,11 @@ class ClusterSim:
         new_fail = alive & (fail_u < dt / (cfg.device_mtbf_h * 3600.0))
         for i in np.flatnonzero(new_fail):
             s.failed_until[i] = t + cfg.device_repair_s
-            self._evict(int(i), requeues, count=False)
+            if self.hooks is not None:
+                self.hooks.on_device_fail(self, t, int(i),
+                                          float(s.failed_until[i]))
+            self._evict(int(i), t, requeues, reason="device_failure",
+                        count=False)
         act = alive & ~new_fail
         qps = self.qps_bank.qps(t)
         on = online_profile_arrays(self.service_idx, qps, SERVICES)
@@ -325,6 +493,10 @@ class ClusterSim:
                                   float(s.wall[i]), float(s.progress[i])))
             s.has_job[i] = False
             self.job_spec[i] = None
+            if self.hooks is not None:
+                self.hooks.on_job_finish(self, t, int(i), spec,
+                                         t - spec.submit_s, float(s.wall[i]),
+                                         float(s.progress[i]))
         # telemetry + SysMonitor
         used_off = np.where(
             s.has_job,
@@ -342,7 +514,7 @@ class ClusterSim:
                                       tele_clock, 60.0)
         evict_ev = self.monitor.update(level, t, active=act)
         for i in np.flatnonzero(evict_ev & s.has_job):
-            self._evict(int(i), requeues, count=True)
+            self._evict(int(i), t, requeues, reason="overlimit", count=True)
         # requeues resume from checkpoint, at the head of the queue in the
         # reference engine's order (reverse device order)
         if requeues:
@@ -365,6 +537,12 @@ class ClusterSim:
         if tput_n:
             self._tput_sum += tput_sum / tput_n
             self._tput_ticks += 1
+        if self.hooks is not None:
+            self.hooks.on_tick_end(self, t, {
+                "qps": qps, "gpu_util": tele_util, "sm_activity": tele_sm,
+                "mem_used": tele_mem, "sm_clock": tele_clock, "level": level,
+                "busy": busy, "active": act, "slowdown": slowdown,
+                "tput": tput})
         if int(t) % 600 == 0:
             slow_n = int(act.sum())
             self._timeline["t"].append(t)
@@ -399,17 +577,27 @@ class ClusterSim:
 
     def _inject_error(self, i: int, t: float, kind_u: float,
                       requeues: list) -> None:
+        self._handle_error(i, t, error_from_uniform(kind_u), requeues)
+
+    def _handle_error(self, i: int, t: float, kind, requeues: list):
+        """One offline-container error on device ``i`` — the single path
+        shared by the engine's own error process and ``force_error``, so
+        injected/propagated accounting can never drift between them."""
         self.errors_injected += 1
-        handled = self.err_handler.handle(error_from_uniform(kind_u))
+        handled = self.err_handler.handle(kind)
         if handled.propagated:
             self.state.outage_until[i] = t + self.cfg.online_outage_s
             self.online_incidents += 1
         if handled.action.value == "graceful_exit":
             # graceful exit checkpoints before releasing
             self.state.checkpoint[i] = self.state.progress[i]
-        self._evict(i, requeues, count=False)
+        if self.hooks is not None:
+            self.hooks.on_error(self, t, i, handled)
+        self._evict(i, t, requeues, reason="error", count=False)
+        return handled
 
-    def _evict(self, i: int, requeues: list, count: bool = True) -> None:
+    def _evict(self, i: int, t: float, requeues: list, *,
+               reason: str = "overlimit", count: bool = True) -> None:
         s = self.state
         if not s.has_job[i]:
             return
@@ -420,16 +608,20 @@ class ClusterSim:
         checkpoint = float(s.checkpoint[i])
         s.has_job[i] = False
         self.job_spec[i] = None
-        if progress < spec.duration_s:
+        requeued = progress < spec.duration_s
+        if requeued:
             # resume from last checkpoint
             requeues.append((i, dataclasses.replace(
                 spec, duration_s=spec.duration_s - checkpoint)))
+        if self.hooks is not None:
+            self.hooks.on_job_evict(self, t, i, spec, reason, progress,
+                                    checkpoint, requeued)
 
     # -------------------------------------------------------------- results
     def _results(self, t_end: float) -> SimResults:
         s = self.state
         r = SimResults(policy=self.cfg.policy, trace=self.cfg.trace)
-        r.n_jobs = len(self.jobs)
+        r.n_jobs = len(self.jobs) + self._n_injected
         r.n_finished = len(self.finished)
         if self.finished:
             r.avg_jct_s = float(np.mean([jct for _, jct, _, _ in self.finished]))

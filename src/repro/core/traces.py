@@ -10,6 +10,7 @@ trace by virtual cluster ID.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 
 import numpy as np
@@ -137,5 +138,10 @@ def make_trace(name: str, n_devices: int, horizon_s: float,
     GPUs)."""
     load = {"A": 1.6, "B": 2.8, "C": 4.6, "D": 7.0}[name]
     n_jobs = max(4, int(n_devices * load * (horizon_s / (12 * 3600.0))))
-    rng = np.random.default_rng(hash(name) % (1 << 31) + seed)
+    # stable digest, NOT builtin hash(): str hashing is randomized per
+    # process (PYTHONHASHSEED), which would make traces — and every scenario
+    # report built on them — irreproducible across runs
+    name_seed = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4],
+                               "little")
+    rng = np.random.default_rng(name_seed % (1 << 31) + seed)
     return philly_like_trace(rng, n_jobs=n_jobs, horizon_s=horizon_s)

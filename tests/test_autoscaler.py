@@ -1,0 +1,104 @@
+"""Unit tests for the online-service horizontal autoscaler: target-tracking
+with hysteresis (upper/lower band), scale-up cooldown, and the scale-down
+stability window — plus its control-plane wiring (scale-ups evict offline
+partners; decisions land on the event bus)."""
+import pytest
+
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+
+CFG = AutoscalerConfig(target_load=0.6, upper=0.8, lower=0.35,
+                       min_replicas=2, max_replicas=64,
+                       cooldown_s=300.0, scale_down_stability_s=600.0)
+
+
+def make(replicas=10, capacity=100.0, cfg=CFG):
+    return Autoscaler(cfg, replicas=replicas, qps_capacity_per_replica=capacity)
+
+
+# ------------------------------------------------------------------ scale up
+def test_no_decision_inside_band():
+    a = make()
+    # load = 600/(10*100) = 0.6 -> inside [lower, upper]
+    assert a.observe(600.0, now=1000.0) is None
+    assert a.replicas == 10
+
+
+def test_scale_up_targets_the_band_center():
+    a = make()
+    d = a.observe(1000.0, now=1000.0)          # load 1.0 > 0.8
+    assert d is not None and d.delta > 0
+    # sized so the new load sits at target: ceil(1000/(100*0.6)) = 17
+    assert d.replicas == 17 and a.replicas == 17
+
+
+def test_scale_up_cooldown_blocks_consecutive_ups():
+    a = make()
+    assert a.observe(1000.0, now=0.0) is not None
+    assert a.observe(5000.0, now=100.0) is None        # inside cooldown
+    assert a.observe(5000.0, now=301.0) is not None    # cooldown elapsed
+
+
+def test_scale_up_clamped_to_max():
+    a = make(replicas=60)
+    d = a.observe(60 * 100.0 * 2.0, now=0.0)           # wants 200 replicas
+    assert d.replicas == CFG.max_replicas
+
+
+# ---------------------------------------------------------------- scale down
+def test_scale_down_requires_stability_window():
+    a = make()
+    # load 0.2 < lower: first sighting only arms the window
+    assert a.observe(200.0, now=0.0) is None
+    # still inside the stability window -> no decision
+    assert a.observe(200.0, now=599.0) is None
+    d = a.observe(200.0, now=601.0)
+    assert d is not None and d.delta < 0
+    assert d.replicas == 4                              # ceil(200/60)
+
+
+def test_bounce_back_resets_stability_window():
+    a = make()
+    assert a.observe(200.0, now=0.0) is None            # arms window
+    assert a.observe(600.0, now=300.0) is None          # back in band: reset
+    assert a.observe(200.0, now=601.0) is None          # re-arms, not down
+    assert a.observe(200.0, now=1300.0) is not None     # full window again
+
+
+def test_scale_down_clamped_to_min():
+    a = make(replicas=3)
+    a.observe(1.0, now=0.0)
+    d = a.observe(1.0, now=700.0)
+    assert d is not None and d.replicas == CFG.min_replicas
+
+
+def test_hysteresis_band_no_flapping():
+    """Loads wandering inside (lower, upper) never trigger decisions."""
+    a = make()
+    t = 0.0
+    for load_frac in (0.4, 0.7, 0.5, 0.79, 0.36, 0.6):
+        assert a.observe(load_frac * 10 * 100.0, now=t) is None, load_frac
+        t += 1000.0
+    assert a.replicas == 10
+
+
+# ------------------------------------------------------- control-plane wiring
+@pytest.mark.slow
+def test_control_plane_scale_up_evicts_offline_partners():
+    from repro.cluster import ControlPlane, Scenario
+    from repro.cluster.events import EventKind
+
+    sc = Scenario(name="as-test", n_devices=48, hours=2.0, trace="C",
+                  autoscale=True, keep_event_log=True,
+                  predictor_samples=120, predictor_epochs=4, seed=5)
+    cp = ControlPlane(sc)
+    cp.run()
+    ups = [e for e in cp.bus.log if e.kind is EventKind.AUTOSCALE
+           and dict(e.data)["delta"] > 0]
+    evictions = [e for e in cp.bus.log if e.kind is EventKind.JOB_EVICT
+                 and dict(e.data)["reason"] == "autoscale"]
+    assert cp.autoscale_decisions, "diurnal load should trigger decisions"
+    # every autoscale eviction coincides with some scale-up event
+    up_times = {e.t for e in ups}
+    assert all(e.t in up_times for e in evictions)
+    rep = cp.report()
+    assert rep["autoscaler"]["n_decisions"] == len(cp.autoscale_decisions)

@@ -1,0 +1,260 @@
+"""repro.cluster subsystem tests: deterministic event ordering, job-lifecycle
+legality, fault-campaign ERROR_MIX proportions, agent staleness, heterogeneous
+fleets, and the scenario report contract."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ControlPlane, FaultCampaignConfig, FleetSpec,
+                           GPUPool, JobManager, JobState, LifecycleError,
+                           Scenario, run_scenario)
+from repro.cluster.agents import AgentConfig
+from repro.cluster.control import run_policy_scenario
+from repro.cluster.events import EventBus, EventKind
+from repro.cluster.run import check_schema
+from repro.core.errors import ERROR_MIX, ErrorKind
+from repro.core.predictor import build_speed_predictor
+from repro.core.simulator import run_policy
+
+TINY = dict(n_devices=48, hours=1.5, seed=9, predictor_samples=120,
+            predictor_epochs=4)
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    return build_speed_predictor(gpu_types=("T4", "A10"), n=150, epochs=5)
+
+
+def _scenario(**kw):
+    base = dict(name="t", trace="C", keep_event_log=True, **TINY)
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ------------------------------------------------------------ event ordering
+def test_event_stream_deterministic_under_fixed_seed(predictor):
+    sc = _scenario(faults=FaultCampaignConfig(rate_per_device_hour=0.6),
+                   agents=AgentConfig(drop_rate=0.05), autoscale=True)
+    runs = []
+    for _ in range(2):
+        cp = ControlPlane(sc, predictor=predictor)
+        cp.run()
+        runs.append(cp)
+    a, b = runs
+    assert a.bus.digest() == b.bus.digest()
+    assert [e.key() for e in a.bus.log] == [e.key() for e in b.bus.log]
+    # seq numbers are a gapless total order
+    seqs = [e.seq for e in a.bus.log]
+    assert seqs == list(range(len(seqs)))
+    # and a different seed produces a different stream
+    cp3 = ControlPlane(_scenario(
+        seed=10, faults=FaultCampaignConfig(rate_per_device_hour=0.6),
+        agents=AgentConfig(drop_rate=0.05), autoscale=True),
+        predictor=predictor)
+    cp3.run()
+    assert cp3.bus.digest() != a.bus.digest()
+
+
+def test_event_time_is_nondecreasing(predictor):
+    cp = ControlPlane(_scenario(
+        faults=FaultCampaignConfig(rate_per_device_hour=0.4)),
+        predictor=predictor)
+    cp.run()
+    ts = [e.t for e in cp.bus.log]
+    assert all(t2 >= t1 for t1, t2 in zip(ts, ts[1:]))
+
+
+# -------------------------------------------------------- lifecycle legality
+def test_lifecycle_legal_under_fault_pressure(predictor):
+    """Strict JobManager across a fault/failure-heavy run: no illegal
+    transition (double placement, run-after-complete) ever fires."""
+    sc = _scenario(faults=FaultCampaignConfig(rate_per_device_hour=1.5),
+                   device_mtbf_h=20.0, error_rate_per_job_hour=0.3)
+    cp = ControlPlane(sc, predictor=predictor)
+    cp.run()                       # strict mode raises on violation
+    jm = cp.job_manager
+    assert not jm.violations
+    s = jm.summary()
+    assert s["n_jobs"] == sum(s["by_state"].values())
+    # every engine-finished job is COMPLETED in the manager
+    assert s["completed"] >= cp.results.n_finished
+    assert s["total_preemptions"] > 0          # pressure actually preempted
+    assert s["total_lost_work_s"] >= 0.0
+    # re-placements after preemption pay the modeled restore cost
+    if s["total_preemptions"]:
+        assert s["total_restore_overhead_s"] >= 0.0
+    # n_jobs flows through the engine's injected-job accounting
+    assert cp.results.n_jobs == s["n_jobs"]
+
+
+def test_job_manager_rejects_illegal_transitions():
+    bus = EventBus()
+    jm = JobManager(bus, strict=True)
+    bus.emit(0.0, EventKind.JOB_SUBMIT, job=1,
+             data=(("model", "ResNet50"), ("duration_s", 100.0)))
+    bus.emit(10.0, EventKind.JOB_START, device=3, job=1)
+    with pytest.raises(LifecycleError):        # double placement
+        bus.emit(11.0, EventKind.JOB_START, device=4, job=1)
+    bus.emit(50.0, EventKind.JOB_FINISH, device=3, job=1,
+             data=(("jct_s", 50.0),))
+    with pytest.raises(LifecycleError):        # run after complete
+        bus.emit(60.0, EventKind.JOB_START, device=5, job=1)
+    with pytest.raises(LifecycleError):        # finish after complete
+        bus.emit(61.0, EventKind.JOB_FINISH, device=3, job=1)
+    assert jm.jobs[1].state is JobState.COMPLETED
+
+
+def test_job_manager_preemption_bookkeeping():
+    bus = EventBus()
+    jm = JobManager(bus, restart_delay_s=90.0, strict=True)
+    bus.emit(0.0, EventKind.JOB_SUBMIT, job=7,
+             data=(("model", "VGG16"), ("duration_s", 500.0)))
+    bus.emit(30.0, EventKind.JOB_START, device=0, job=7)
+    bus.emit(130.0, EventKind.JOB_EVICT, device=0, job=7,
+             data=(("reason", "overlimit"), ("progress_s", 100.0),
+                   ("checkpoint_s", 60.0), ("requeued", True)))
+    bus.emit(200.0, EventKind.JOB_START, device=2, job=7)
+    bus.emit(700.0, EventKind.JOB_FINISH, device=2, job=7,
+             data=(("jct_s", 700.0),))
+    rec = jm.jobs[7]
+    assert rec.preemptions == 1 and rec.placements == 2
+    assert rec.lost_work_s == pytest.approx(40.0)       # 100 - 60
+    assert rec.restore_overhead_s == pytest.approx(90.0)
+    assert rec.queue_wait_s == pytest.approx(30.0 + 70.0)
+
+
+# ------------------------------------------------------------ fault campaign
+def test_fault_campaign_matches_error_mix(predictor):
+    """Injected kind counts follow the Fig. 7 production mix."""
+    rep = run_scenario(
+        "fault-storm", predictor=predictor, n_devices=300, hours=4.0, seed=1,
+        faults=FaultCampaignConfig(rate_per_device_hour=4.0))
+    f = rep["faults"]
+    total = f["injected"]
+    assert total > 400                       # enough mass to test proportions
+    sig = (f["injected_by_kind"].get("sigint", 0)
+           + f["injected_by_kind"].get("sigterm", 0))
+    p_sig = (ERROR_MIX[ErrorKind.SIGINT] + ERROR_MIX[ErrorKind.SIGTERM])
+    assert sig / total == pytest.approx(p_sig, abs=0.02)
+    for kind in ("mps_server_crash", "xid31_page_fault", "mps_hang"):
+        assert f["injected_by_kind"].get(kind, 0) / total < 0.03
+    # engine accounting matches campaign accounting (campaign drives all
+    # errors in fault-storm: the engine's own error process is off)
+    assert rep["sim"]["errors_injected"] == total
+
+
+def test_propagation_with_and_without_graceful_exit(predictor):
+    on = run_scenario("fault-storm", predictor=predictor, n_devices=200,
+                      hours=2.0, seed=0)
+    off = run_scenario("fault-storm", predictor=predictor, n_devices=200,
+                       hours=2.0, seed=0, graceful_exit=False)
+    assert on["faults"]["injected"] > 30
+    assert on["faults"]["propagation_rate"] < 0.01
+    assert off["faults"]["propagation_rate"] > 0.50
+    assert off["sim"]["online_incidents"] > 0
+    assert on["sim"]["online_incidents"] == 0
+
+
+# ------------------------------------------------------------------- agents
+def test_agent_staleness_shrinks_schedulable_set(predictor):
+    sc = _scenario(agents=AgentConfig(drop_rate=0.4, stale_after=1.0))
+    cp = ControlPlane(sc, predictor=predictor)
+    cp.run()
+    s = cp.agents.summary()
+    assert s["reports_dropped"] > 0
+    assert s["stale_episodes"] > 0 and s["stale_device_ticks"] > 0
+    assert cp.bus.counts.get("agent_stale", 0) == s["stale_episodes"]
+    # recovery events exist too (agents come back on a successful heartbeat)
+    assert cp.bus.counts.get("agent_fresh", 0) > 0
+    snap = cp.agents.snapshot(now=sc.hours * 3600.0)
+    assert snap["stale"].dtype == bool and len(snap["age_s"]) == sc.n_devices
+    # the §4.3 recommendation derived from reported telemetry stays in-band
+    reco = snap["dyn_sm_recommended"]
+    assert np.all((reco >= 0.1 - 1e-12) & (reco <= 0.9 + 1e-12))
+
+
+# ------------------------------------------------------ heterogeneous fleets
+def test_fleet_spec_apportionment_exact():
+    pools = (GPUPool("a", "T4", 0.6), GPUPool("b", "A10", 0.25, 1.35, 24.0),
+             GPUPool("c", "A100", 0.15, 2.6, 40.0))
+    fs = FleetSpec(1000, pools)
+    assert sum(fs.counts) == 1000 and fs.counts == [600, 250, 150]
+    assert len(fs.gpu_type) == 1000 and fs.speed.shape == (1000,)
+    assert fs.gpu_types == ("T4", "A10", "A100")
+    # odd sizes still sum exactly
+    assert sum(FleetSpec(101, pools).counts) == 101
+
+
+def test_per_pool_memory_feasibility(predictor):
+    """An HBM-starved pool rejects pairings a roomy pool accepts."""
+    sc = _scenario(pools=(
+        GPUPool("tiny", "T4", 0.5, 1.0, hbm_gb=10.0),
+        GPUPool("roomy", "T4", 0.5, 1.0, hbm_gb=32.0)))
+    cp = ControlPlane(sc, predictor=predictor)
+    feas = cp.sim.feasible
+    assert feas.shape[0] == 2
+    assert feas[0].sum() < feas[1].sum()
+    # pool views carry the hbm sizes
+    views = cp.sim.pool_view(0.0)
+    assert [v["pool"] for v in views] == ["tiny", "roomy"]
+    assert views[0]["hbm_gb"] == pytest.approx(10.0)
+
+
+# ------------------------------------------------------- report + entry point
+def test_report_schema_and_json_round_trip(predictor):
+    rep = run_scenario("smoke", predictor=None)
+    assert check_schema(rep) == []
+    blob = json.dumps(rep, sort_keys=True)
+    assert json.loads(blob) == rep
+
+
+def test_mid_run_injection_counts(predictor):
+    sc = _scenario()
+    cp = ControlPlane(sc, predictor=predictor)
+    cp.run()
+    # every trace job was submitted by the control plane, none pre-loaded
+    assert len(cp.sim.jobs) == 0
+    assert cp.results.n_jobs == len(cp.trace_jobs)
+    assert cp.bus.counts["job_submit"] == len(cp.trace_jobs)
+
+
+def test_policy_passthrough_matches_run_policy(predictor):
+    """With every control-plane feature neutral, ControlPlane reproduces
+    run_policy exactly — same engine, same RNG stream."""
+    # includes knobs only SimConfig (not the Scenario headline set) carries,
+    # pinning that nothing is silently dropped on the way through
+    kw = dict(n_devices=40, horizon_s=2 * 3600.0, tick_s=60.0, trace="B",
+              seed=4, memory_quota=0.3, device_repair_s=900.0,
+              checkpoint_interval_s=240.0, gpu_types=("T4", "A10", "A10"))
+    ref = run_policy("muxflow", predictor, **kw)
+    got = run_policy_scenario("muxflow", predictor, **kw)
+    for f in ("n_jobs", "n_finished", "evictions", "errors_injected",
+              "online_incidents"):
+        assert getattr(got, f) == getattr(ref, f), f
+    assert got.avg_slowdown == pytest.approx(ref.avg_slowdown, rel=1e-12)
+    assert got.oversold_gpu == pytest.approx(ref.oversold_gpu, rel=1e-12)
+    # a horizon whose seconds->hours->seconds conversion does NOT round-trip
+    # (1950/3600*3600 != 1950): the exact horizon must still carry through
+    kw2 = dict(n_devices=20, horizon_s=1950.0, tick_s=30.0, trace="B",
+               seed=3)
+    ref2 = run_policy("time-sharing", None, **kw2)
+    got2 = run_policy_scenario("time-sharing", None, **kw2)
+    assert got2.gpu_util == ref2.gpu_util
+    assert got2.n_jobs == ref2.n_jobs
+
+
+# ---------------------------------------------------------------- event bus
+def test_event_bus_counts_digest_and_subscribers():
+    bus = EventBus(keep_log=True)
+    seen = []
+    bus.subscribe(lambda e: seen.append(("one", e.seq)), EventKind.ERROR)
+    bus.subscribe(lambda e: seen.append(("all", e.seq)))
+    bus.emit(0.0, EventKind.ERROR, device=1, data=(("kind", "sigint"),))
+    bus.emit(1.0, EventKind.SCHEDULE, data=(("free", 3),))
+    assert bus.counts == {"error": 1, "schedule": 1}
+    assert seen == [("one", 0), ("all", 0), ("all", 1)]
+    d1 = bus.digest()
+    bus.emit(2.0, EventKind.ERROR, device=2)
+    assert bus.digest() != d1
+    assert bus.n_events == 3 and len(bus.log) == 3
