@@ -23,7 +23,8 @@ import time
 
 import numpy as np
 
-from repro.core.simulator import POLICIES, ClusterSim, SimConfig
+from repro.core.simulator import ClusterSim, SimConfig
+from repro.policies import available, resolve
 
 try:
     from .bench_lib import emit
@@ -42,7 +43,8 @@ def bench_cell(policy: str, n_devices: int, predictor, *, horizon_s: float,
                tick_s: float, trace: str, seed: int = 0) -> dict:
     cfg = SimConfig(policy=policy, n_devices=n_devices, horizon_s=horizon_s,
                     tick_s=tick_s, trace=trace, seed=seed)
-    sim = ClusterSim(cfg, predictor if policy.startswith("muxflow") else None)
+    sim = ClusterSim(cfg,
+                     predictor if resolve(policy).needs_predictor else None)
     t0 = time.perf_counter()
     res = sim.run()
     wall = time.perf_counter() - t0
@@ -99,7 +101,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", default="200,2000,20000")
     ap.add_argument("--policies", default="all",
-                    help="'all' or comma-separated subset of " + ",".join(POLICIES))
+                    help="'all' or comma-separated subset of "
+                         + ",".join(available()))
     ap.add_argument("--trace", default="A")
     ap.add_argument("--horizon-h", type=float, default=12.0)
     ap.add_argument("--tick", type=float, default=30.0)
@@ -112,11 +115,11 @@ def main(argv=None) -> int:
         horizon_s, tick_s = 1800.0, args.tick
     else:
         devices = [int(d) for d in args.devices.split(",")]
-        policies = (list(POLICIES) if args.policies == "all"
+        policies = (list(available()) if args.policies == "all"
                     else args.policies.split(","))
         horizon_s, tick_s = args.horizon_h * 3600.0, args.tick
     for p in policies:
-        assert p in POLICIES, p
+        resolve(p)          # unknown names raise with the available list
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
     predictor = _build_predictor(tiny=args.smoke)

@@ -10,6 +10,8 @@ import time
 # rides the repro.cluster control plane (neutral passthrough: same
 # engine + RNG stream as repro.core.simulator.run_policy)
 from repro.cluster.control import run_policy_scenario as run_policy
+from repro.policies import resolve
+
 from .bench_lib import emit
 from .predictor_cache import get_predictor
 
@@ -22,7 +24,10 @@ def run() -> None:
         res = {}
         for pol in ("muxflow", "muxflow-s", "muxflow-m", "muxflow-s-m"):
             t0 = time.perf_counter()
-            res[pol] = run_policy(pol, pred, trace=trace, **BASE)
+            res[pol] = run_policy(pol,
+                                  pred if resolve(pol).needs_predictor
+                                  else None,
+                                  trace=trace, **BASE)
             emit(f"fig13_{trace}_{pol}", (time.perf_counter() - t0) * 1e6,
                  f"jct={res[pol].avg_jct_s:.0f}s;oversold={res[pol].oversold_gpu:.3f};"
                  f"slow={res[pol].avg_slowdown:.3f}")

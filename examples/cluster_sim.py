@@ -9,6 +9,7 @@ autoscaling) through `repro.cluster`.
 from repro.cluster import run_scenario
 from repro.cluster.control import run_policy_scenario
 from repro.core.predictor import build_speed_predictor
+from repro.policies import resolve
 
 
 def main() -> None:
@@ -23,9 +24,10 @@ def main() -> None:
     print(header)
     print("-" * len(header))
     for pol in ("online-only", "muxflow", "muxflow-s", "muxflow-m",
-                "muxflow-s-m", "pb-time-sharing", "time-sharing"):
+                "muxflow-s-m", "pb-time-sharing", "time-sharing",
+                "tally-priority", "static-partition"):
         r = run_policy_scenario(
-            pol, pred if pol.startswith("muxflow") else None, **cfg)
+            pol, pred if resolve(pol).needs_predictor else None, **cfg)
         print(f"{pol:18s} {r.avg_slowdown:>10.3f}x {r.p99_latency_ms:>8.1f} "
               f"{r.avg_jct_s/60:>7.1f}mn {r.n_finished:>4d}/{r.n_jobs:<4d} "
               f"{r.oversold_gpu:>8.3f} {r.gpu_util:>5.2f} "

@@ -32,8 +32,10 @@ from repro.cluster.jobs import JobManager
 from repro.cluster.scenario import Scenario, scenario_by_name
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.interference import ONLINE_SERVICE_PROFILES
-from repro.core.simulator import ClusterSim, SimConfig, SimHooks
+from repro.core.simulator import (ClusterSim, SimConfig, SimHooks,
+                                  build_sim_config)
 from repro.core.traces import SERVICES, make_trace
+from repro.policies import resolve as resolve_policy
 
 REPORT_SCHEMA = "repro.cluster.report/v1"
 
@@ -95,7 +97,7 @@ class ControlPlane:
         self.scenario = sc
         self.bus = EventBus(keep_log=sc.keep_event_log)
         self.fleet = FleetSpec(sc.n_devices, sc.pools) if sc.pools else None
-        if predictor is None and sc.policy.startswith("muxflow"):
+        if predictor is None and resolve_policy(sc.policy).needs_predictor:
             from repro.core.predictor import build_speed_predictor
             gpu_types = (self.fleet.gpu_types if self.fleet
                          else tuple(dict.fromkeys(sc.gpu_types)))
@@ -276,17 +278,24 @@ def run_scenario(name_or_scenario, predictor=None, **overrides) -> dict:
     return cp.report()
 
 
-def run_policy_scenario(policy: str, predictor=None, **sim_overrides):
+def run_policy_scenario(policy, predictor=None, **sim_overrides):
     """Neutral passthrough for the figure benchmarks: run one policy through
     the control plane with every scenario feature off — the trajectory is
     identical to ``repro.core.simulator.run_policy`` (same engine, same RNG
     stream, trace-driven jobs, no campaign/agent/autoscale interference) but
-    rides the ControlPlane entry point and yields its event stream."""
-    cfg = SimConfig(policy=policy, **sim_overrides)
+    rides the ControlPlane entry point and yields its event stream.
+
+    Policy resolution goes through the same ``build_sim_config`` path as
+    ``run_policy`` itself, so name validation cannot drift between the two.
+    One deliberate difference remains: for a ``needs_predictor`` policy with
+    ``predictor=None``, ``run_policy`` raises while this entry point (like
+    every scenario run) auto-builds a default predictor — pass the predictor
+    explicitly when comparing trajectories against ``run_policy``."""
+    cfg, pol = build_sim_config(policy, **sim_overrides)
     # every SimConfig knob maps onto a Scenario field — nothing the caller
     # passes can be silently dropped on the way into the ControlPlane
     sc = Scenario(
-        name=f"policy:{policy}", policy=policy, n_devices=cfg.n_devices,
+        name=f"policy:{pol.name}", policy=cfg.policy, n_devices=cfg.n_devices,
         hours=cfg.horizon_s / 3600.0, horizon_s=cfg.horizon_s,
         tick_s=cfg.tick_s,
         schedule_interval_s=cfg.schedule_interval_s,

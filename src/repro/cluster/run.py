@@ -1,6 +1,9 @@
 """Scenario-runner CLI for the cluster control plane.
 
   PYTHONPATH=src python -m repro.cluster.run --list
+  PYTHONPATH=src python -m repro.cluster.run --list-policies
+  PYTHONPATH=src python -m repro.cluster.run --scenario smoke \
+      --policy tally-priority
   PYTHONPATH=src python -m repro.cluster.run --scenario smoke
   PYTHONPATH=src python -m repro.cluster.run --scenario diurnal-mixed \
       --devices 20000 --hours 12 --seed 0 --out report.json
@@ -21,6 +24,7 @@ import time
 
 from repro.cluster.control import REPORT_SCHEMA, run_scenario
 from repro.cluster.scenario import SCENARIOS, scenario_by_name
+from repro.policies import available, resolve
 
 # top-level keys every v1 report must carry (None allowed for unused parts)
 SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
@@ -59,7 +63,8 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--hours", type=float, default=None)
     ap.add_argument("--seed", type=int, default=None)
-    ap.add_argument("--policy", default=None)
+    ap.add_argument("--policy", default=None,
+                    help="sharing-policy override (see --list-policies)")
     ap.add_argument("--tick", type=float, default=None)
     gx = ap.add_mutually_exclusive_group()
     gx.add_argument("--graceful-exit", dest="graceful", action="store_true",
@@ -70,6 +75,8 @@ def main(argv=None) -> int:
                     "(default: stdout)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
+    ap.add_argument("--list-policies", action="store_true",
+                    help="list registered sharing policies and exit")
     ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
                     help="validate an existing report file and exit")
     args = ap.parse_args(argv)
@@ -77,6 +84,15 @@ def main(argv=None) -> int:
     if args.list:
         for name, sc in sorted(SCENARIOS.items()):
             print(f"{name:16s} {sc.description}")
+        return 0
+    if args.list_policies:
+        for name in available():
+            pol = resolve(name)
+            tags = "".join(t for t, on in
+                           (("[needs-predictor] ", pol.needs_predictor),
+                            ("[no-scheduling] ", not pol.wants_scheduling))
+                           if on)
+            print(f"{name:18s} {tags}{pol.description}")
         return 0
     if args.check_schema:
         with open(args.check_schema) as f:

@@ -14,13 +14,16 @@ import dataclasses
 from repro.cluster.agents import AgentConfig
 from repro.cluster.faults import FaultCampaignConfig
 from repro.cluster.fleet import GPUPool
+from repro.policies import SharingPolicy, policy_name
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     name: str
     description: str = ""
-    policy: str = "muxflow"
+    # a repro.policies registry name or a SharingPolicy instance; reports
+    # always carry the canonical name
+    policy: str | SharingPolicy = "muxflow"
     n_devices: int = 200
     hours: float = 12.0
     horizon_s: float | None = None    # exact horizon; overrides hours when
@@ -64,6 +67,7 @@ class Scenario:
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
+        d["policy"] = policy_name(self.policy)
         d["pools"] = [p.to_dict() for p in self.pools]
         return d
 
@@ -124,6 +128,22 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
                     "impact of control-plane staleness.",
         trace="C",
         agents=AgentConfig(drop_rate=0.15, stale_after=2.0)),
+    Scenario(
+        name="tally-slice",
+        description="Tally-style priority task-slicing on a heterogeneous "
+                    "fleet: best-effort work rides priority-gated slack "
+                    "slices — near-zero online slowdown, reduced offline "
+                    "throughput.",
+        policy="tally-priority", trace="B", pools=_HETERO_POOLS,
+        agents=AgentConfig()),
+    Scenario(
+        name="mig-partition",
+        description="ParvaGPU-style static spatial partitioning under heavy "
+                    "trace-D load: a fixed MIG-like SM split isolates every "
+                    "pair; predictable offline slice, online capped at its "
+                    "partition.",
+        policy="static-partition", trace="D", pools=_TIGHT_POOLS,
+        agents=AgentConfig()),
 )}
 
 

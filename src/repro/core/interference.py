@@ -133,6 +133,16 @@ def online_profile_arrays(service_idx: np.ndarray, qps: np.ndarray,
     }
 
 
+def instantaneous_sm_demand(sm_activity: np.ndarray,
+                            gpu_util: np.ndarray) -> np.ndarray:
+    """Duty-cycle-corrected instantaneous SM demand: while a kernel is
+    executing, its SM demand is the time-averaged activity divided by the
+    time occupancy (floored at 0.05), capped at 1.  The single home for this
+    correction — the interference model and the sharing policies that reason
+    about spatial slack (tally-priority, static-partition) all use it."""
+    return np.minimum(1.0, sm_activity / np.maximum(gpu_util, 0.05))
+
+
 def shared_performance_arrays(on: dict[str, np.ndarray],
                               off: dict[str, np.ndarray],
                               sm_off: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -141,7 +151,7 @@ def shared_performance_arrays(on: dict[str, np.ndarray],
     sm_off = np.clip(sm_off, 0.0, 1.0)
     a_on = on["sm_activity"]
     used_off = np.minimum(sm_off, off["sm_activity"])
-    inst_on = np.minimum(1.0, a_on / np.maximum(on["gpu_util"], 0.05))
+    inst_on = instantaneous_sm_demand(a_on, on["gpu_util"])
     overlap_inst = np.maximum(0.0, inst_on + used_off - 1.0)
     overlap_avg = overlap_inst * on["gpu_util"]
     bw_off = off["mem_bw"] * (used_off / np.maximum(off["sm_activity"], 1e-6))

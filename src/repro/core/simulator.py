@@ -6,9 +6,13 @@ Fixed-tick discrete-event simulation of a GPU cluster where every device
 hosts one online workload (diurnal QPS) and at most one offline workload.
 Implements the full MuxFlow stack — dynamic SM allocation, the speed
 predictor + KM matching scheduler, SysMonitor protection/eviction, the mixed
-error handler, checkpoint/restart fault tolerance — and the paper's
-baselines: Online-only, Time-sharing (Gandiva-style), and Priority-based
-time-sharing (AntMan/PAI-style), plus the MuxFlow-S/-M/-S-M ablations.
+error handler, checkpoint/restart fault tolerance.  GPU-sharing behavior
+(what gets scheduled, with what SM shares, and how a sharing pair performs)
+is delegated to a pluggable :class:`repro.policies.SharingPolicy` resolved
+through the policy registry — the paper's baselines (Online-only,
+Gandiva-style time-sharing, AntMan/PAI-style priority time-sharing, the
+MuxFlow-S/-M/-S-M ablations) and the related-work policies all live in
+:mod:`repro.policies`, not here.
 
 This module holds the *vectorized* engine: device state lives in
 struct-of-arrays numpy form (:class:`FleetState`) and each 30 s tick is a
@@ -22,6 +26,7 @@ providers, so their trajectories are reproducible against each other.
 """
 from __future__ import annotations
 
+import collections.abc
 import dataclasses
 import time
 
@@ -31,17 +36,14 @@ from repro.core.errors import MixedErrorHandler, error_from_uniform
 from repro.core.interference import (OFFLINE_MODEL_PROFILES,
                                      ONLINE_SERVICE_PROFILES,
                                      memory_feasible, online_profile,
-                                     online_profile_arrays,
-                                     shared_performance_arrays)
+                                     online_profile_arrays)
 from repro.core.predictor import CachedSpeedPredictor, SpeedPredictor
-from repro.core.scheduler import (OfflineJob, SchedulerConfig,
-                                  build_online_slots, schedule)
+from repro.core.scheduler import (OfflineJob, build_online_slots, schedule)
 from repro.core.sysmonitor import VectorSysMonitor
 from repro.core.traces import (SERVICES, OfflineJobSpec, OnlineQPS, QPSBank,
                                make_trace)
-
-POLICIES = ("muxflow", "muxflow-s", "muxflow-m", "muxflow-s-m",
-            "online-only", "time-sharing", "pb-time-sharing")
+from repro.policies import SharingPolicy
+from repro.policies import resolve as resolve_policy
 
 DEFAULT_HBM_GB = 16.0     # T4-class device the workload profiles are scaled to
 
@@ -53,7 +55,9 @@ _P99_MAX_MS = 10_000.0
 
 @dataclasses.dataclass
 class SimConfig:
-    policy: str = "muxflow"
+    # registry name (see repro.policies.available()) or a SharingPolicy
+    # instance; resolved once at engine construction
+    policy: str | SharingPolicy = "muxflow"
     n_devices: int = 200
     horizon_s: float = 12 * 3600.0
     tick_s: float = 30.0
@@ -181,18 +185,54 @@ class FleetState:
         )
 
 
+class _OfflineView(collections.abc.Mapping):
+    """Lazy per-device offline-profile gather handed to
+    :meth:`SharingPolicy.shared_performance` as the ``off`` mapping.
+
+    Each key (``gpu_util``, ``sm_activity``, ``sm_occupancy``, ``mem_bw``,
+    ``exec_time_ms``, ``mem_bytes_frac``) is gathered from the per-model
+    constant arrays on first access and memoized for the tick, so policies
+    that ignore their offline partner's profile (time-sharing, dedicated,
+    tally) cost nothing here.  A real Mapping, so policies written against
+    the documented dict-like contract (``.get``, iteration) work too.
+    """
+
+    __slots__ = ("_arrs", "_idx", "_cache")
+
+    def __init__(self, arrs: dict[str, np.ndarray], model_idx: np.ndarray):
+        self._arrs = arrs
+        self._idx = model_idx
+        self._cache: dict[str, np.ndarray] = {}
+
+    def __getitem__(self, key: str) -> np.ndarray:
+        v = self._cache.get(key)
+        if v is None:
+            v = self._cache[key] = self._arrs[key][self._idx]
+        return v
+
+    def __iter__(self):
+        return iter(self._arrs)
+
+    def __len__(self) -> int:
+        return len(self._arrs)
+
+
 class ClusterSim:
     """Vectorized MuxFlow cluster simulator (paper-scale capable)."""
 
     def __init__(self, cfg: SimConfig, predictor: SpeedPredictor | None = None,
                  *, fleet=None, hooks: SimHooks | None = None,
                  external_jobs: bool = False):
-        assert cfg.policy in POLICIES, cfg.policy
+        # registry resolution raises ValueError (listing every registered
+        # policy) on unknown names — a real error, not an assert, so it
+        # survives ``python -O``
+        self.policy = resolve_policy(cfg.policy)
         self.cfg = cfg
         self.hooks = hooks
         self.rng = np.random.default_rng(cfg.seed)
-        if cfg.policy.startswith("muxflow") and predictor is None:
-            raise ValueError("MuxFlow policies need a speed predictor")
+        if self.policy.needs_predictor and predictor is None:
+            raise ValueError(
+                f"policy {self.policy.name!r} needs a speed predictor")
         if predictor is not None and cfg.predictor_cache_quantum > 0:
             predictor = CachedSpeedPredictor(
                 predictor, quantum=cfg.predictor_cache_quantum)
@@ -305,7 +345,7 @@ class ClusterSim:
                and self.jobs[self._job_i].submit_s <= t):
             self.pending.append(self.jobs[self._job_i])
             self._job_i += 1
-        if cfg.policy != "online-only" and t >= self._next_sched:
+        if self.policy.wants_scheduling and t >= self._next_sched:
             t0 = time.perf_counter()
             n_free, n_before = self._schedule(t)
             wall = time.perf_counter() - t0
@@ -386,21 +426,25 @@ class ClusterSim:
         cfg = self.cfg
         s = self.state
         n_before = len(self.pending)
-        if cfg.policy in ("time-sharing", "pb-time-sharing"):
-            # greedy FIFO packing: any alive device without a job
+        sched_cfg = self.policy.scheduler_config(shard_size=cfg.shard_size)
+        if sched_cfg is None:
+            # greedy FIFO packing: any alive device without a job, SM share
+            # handed out by the policy
             ok = ~s.has_job & (s.failed_until <= t)
             if self._ext_mask is not None:
                 ok &= self._ext_mask
             free = np.flatnonzero(ok)
-            for i in free[:len(self.pending)]:
-                self._start_job(int(i), self.pending.pop(0), 0.5, t)
+            take = free[:len(self.pending)]
+            if take.size:
+                qps = self.qps_bank.qps(t)
+                on = online_profile_arrays(self.service_idx, qps, SERVICES)
+                shares = self.policy.sm_shares(on, take)
+                for k, i in enumerate(take):
+                    self._start_job(int(i), self.pending.pop(0),
+                                    float(shares[k]), t)
             return int(free.size), n_before
         if not self.pending:
             return 0, n_before
-        sched_cfg = SchedulerConfig(
-            use_dynamic_sm=cfg.policy in ("muxflow", "muxflow-m"),
-            use_matching=cfg.policy in ("muxflow", "muxflow-s"),
-            shard_size=cfg.shard_size)
         # free healthy devices (the paper only schedules onto Healthy GPUs)
         ok = ~s.has_job & (s.failed_until <= t) & self.monitor.schedulable
         if self._ext_mask is not None:
@@ -471,7 +515,8 @@ class ClusterSim:
         qps = self.qps_bank.qps(t)
         on = online_profile_arrays(self.service_idx, qps, SERVICES)
         busy = act & s.has_job
-        slowdown, tput = self._policy_perf(on, busy)
+        off = _OfflineView(self.off_arrs, s.model_idx)
+        slowdown, tput = self.policy.shared_performance(on, off, s.sm_share)
         tput = tput * self.speed
         slowdown = np.where(busy, slowdown, 1.0)
         tput = np.where(busy, tput, 0.0)
@@ -554,27 +599,6 @@ class ClusterSim:
             self._timeline["tput"].append(
                 tput_sum / max(tput_n, 1) if tput_n else 0.0)
 
-    def _policy_perf(self, on: dict, busy: np.ndarray,
-                     ) -> tuple[np.ndarray, np.ndarray]:
-        """(online slowdown, offline normalized tput) arrays per policy."""
-        pol = self.cfg.policy
-        s = self.state
-        n = self.cfg.n_devices
-        if pol.startswith("muxflow"):
-            off = {k: self.off_arrs[k][s.model_idx]
-                   for k in ("gpu_util", "sm_activity", "mem_bw")}
-            return shared_performance_arrays(on, off, s.sm_share)
-        if pol == "time-sharing":
-            # fair time slices (Gandiva-style): offline takes ~half the time
-            off_duty = 0.5
-            slow = 1.0 + 0.9 * off_duty * np.minimum(1.0, on["gpu_util"] * 2.2)
-            return slow, np.full(n, off_duty * 0.9)
-        if pol == "pb-time-sharing":
-            # online priority: offline fills idle *time* only (AntMan/PAI)
-            idle = np.maximum(0.0, 1.0 - on["gpu_util"])
-            return np.full(n, 1.05), idle * 0.8
-        return np.ones(n), np.zeros(n)
-
     def _inject_error(self, i: int, t: float, kind_u: float,
                       requeues: list) -> None:
         self._handle_error(i, t, error_from_uniform(kind_u), requeues)
@@ -620,7 +644,7 @@ class ClusterSim:
     # -------------------------------------------------------------- results
     def _results(self, t_end: float) -> SimResults:
         s = self.state
-        r = SimResults(policy=self.cfg.policy, trace=self.cfg.trace)
+        r = SimResults(policy=self.policy.name, trace=self.cfg.trace)
         r.n_jobs = len(self.jobs) + self._n_injected
         r.n_finished = len(self.finished)
         if self.finished:
@@ -655,7 +679,21 @@ class ClusterSim:
         return r
 
 
-def run_policy(policy: str, predictor: SpeedPredictor | None = None,
+def build_sim_config(policy: str | SharingPolicy,
+                     **overrides) -> tuple[SimConfig, SharingPolicy]:
+    """The one shared config-resolution path for every ``run_policy*``
+    entry point (this module's and the control plane's): the policy resolves
+    through the registry here — unknown names raise ``ValueError`` listing
+    every registered policy — and lands in the config as the resolved
+    object, so policy validation cannot drift between entry points.
+    (Predictor validation has a single home too: ``ClusterSim.__init__``.)
+    """
+    pol = resolve_policy(policy)
+    return SimConfig(policy=pol, **overrides), pol
+
+
+def run_policy(policy: str | SharingPolicy,
+               predictor: SpeedPredictor | None = None,
                **overrides) -> SimResults:
-    cfg = SimConfig(policy=policy, **overrides)
+    cfg, _ = build_sim_config(policy, **overrides)
     return ClusterSim(cfg, predictor).run()

@@ -34,10 +34,15 @@ from repro.core.predictor import SpeedPredictor
 from repro.core.protection import DeviceTelemetry
 from repro.core.scheduler import (OfflineJob, OnlineSlot, SchedulerConfig,
                                   schedule)
-from repro.core.simulator import (_BASE_LATENCY_MS, POLICIES, SimConfig,
-                                  SimResults)
+from repro.core.simulator import _BASE_LATENCY_MS, SimConfig, SimResults
 from repro.core.sysmonitor import SysMonitor
 from repro.core.traces import SERVICES, OfflineJobSpec, OnlineQPS, QPSBank, make_trace
+from repro.policies import resolve as resolve_policy
+
+# the seven policies this reference engine implements per-device; newer
+# registry policies are vectorized-engine-only (nothing pins them here)
+_REFERENCE_POLICIES = ("muxflow", "muxflow-s", "muxflow-m", "muxflow-s-m",
+                       "online-only", "time-sharing", "pb-time-sharing")
 
 
 @dataclasses.dataclass
@@ -66,12 +71,17 @@ class _RunningJob:
 
 class LegacyClusterSim:
     def __init__(self, cfg: SimConfig, predictor: SpeedPredictor | None = None):
-        assert cfg.policy in POLICIES, cfg.policy
+        pol = resolve_policy(cfg.policy)
+        if pol.name not in _REFERENCE_POLICIES:
+            raise ValueError(
+                f"reference engine implements only {_REFERENCE_POLICIES}, "
+                f"got {pol.name!r}")
+        self._pol_name = pol.name
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.predictor = predictor
-        if cfg.policy.startswith("muxflow") and predictor is None:
-            raise ValueError("MuxFlow policies need a speed predictor")
+        if pol.needs_predictor and predictor is None:
+            raise ValueError(f"policy {pol.name!r} needs a speed predictor")
         self.qps_bank = QPSBank([OnlineQPS(self.rng)
                                  for _ in range(cfg.n_devices)])
         self.devices = [
@@ -138,7 +148,7 @@ class LegacyClusterSim:
                 self.pending.append(self.jobs[job_i])
                 job_i += 1
             # scheduling interval
-            if cfg.policy != "online-only" and t >= next_sched:
+            if self._pol_name != "online-only" and t >= next_sched:
                 self._schedule(t)
                 next_sched = t + cfg.schedule_interval_s
             self._tick(t)
@@ -148,7 +158,7 @@ class LegacyClusterSim:
     # ------------------------------------------------------------- schedule
     def _schedule(self, t: float) -> None:
         cfg = self.cfg
-        if cfg.policy in ("time-sharing", "pb-time-sharing"):
+        if self._pol_name in ("time-sharing", "pb-time-sharing"):
             # greedy FIFO packing: any alive device without a job
             for d in self.devices:
                 if not self.pending:
@@ -160,8 +170,8 @@ class LegacyClusterSim:
         if not self.pending:
             return
         sched_cfg = SchedulerConfig(
-            use_dynamic_sm=cfg.policy in ("muxflow", "muxflow-m"),
-            use_matching=cfg.policy in ("muxflow", "muxflow-s"),
+            use_dynamic_sm=self._pol_name in ("muxflow", "muxflow-m"),
+            use_matching=self._pol_name in ("muxflow", "muxflow-s"),
             shard_size=cfg.shard_size)
         # free healthy devices (the paper only schedules onto Healthy GPUs)
         qps = self.qps_bank.qps(t)
@@ -283,7 +293,7 @@ class LegacyClusterSim:
 
     def _policy_perf(self, d: _Device, on, off) -> tuple[float, float]:
         """(online slowdown, offline normalized tput) per policy."""
-        pol = self.cfg.policy
+        pol = self._pol_name
         if pol.startswith("muxflow"):
             return shared_performance(on, off, d.job.sm_share)
         if pol == "time-sharing":
@@ -327,7 +337,7 @@ class LegacyClusterSim:
 
     # -------------------------------------------------------------- results
     def _results(self, t_end: float) -> SimResults:
-        r = SimResults(policy=self.cfg.policy, trace=self.cfg.trace)
+        r = SimResults(policy=self._pol_name, trace=self.cfg.trace)
         r.n_jobs = len(self.jobs)
         r.n_finished = len(self.finished)
         if self.finished:

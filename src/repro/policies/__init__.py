@@ -1,0 +1,35 @@
+"""repro.policies — first-class, pluggable GPU-sharing policies.
+
+The :class:`SharingPolicy` API plus a string-keyed registry
+(:func:`register` / :func:`resolve` / :func:`available`).  Importing this
+package registers the paper's policies (``online-only`` a.k.a.
+``dedicated``, the ``muxflow`` family, ``time-sharing``,
+``pb-time-sharing``) and the related-work baselines (``tally-priority``,
+``static-partition``).
+
+Adding your own policy (see README "Sharing policies" for the worked
+example)::
+
+    from repro.policies import SharingPolicy, register
+
+    class MyPolicy(SharingPolicy):
+        name = "my-policy"
+        def shared_performance(self, on, off, shares):
+            ...
+
+    register(MyPolicy())
+    # now: run_policy("my-policy", ...), --policy my-policy, scenarios, ...
+"""
+from repro.policies.base import (SharingPolicy, available, policy_name,
+                                 register, resolve, unregister)
+from repro.policies.builtin import (DedicatedPolicy, MuxFlowPolicy,
+                                    PriorityTimeSharingPolicy,
+                                    TimeSharingPolicy)
+from repro.policies.extra import StaticPartitionPolicy, TallyPriorityPolicy
+
+__all__ = [
+    "SharingPolicy", "available", "policy_name", "register", "resolve",
+    "unregister", "DedicatedPolicy", "MuxFlowPolicy",
+    "PriorityTimeSharingPolicy", "TimeSharingPolicy",
+    "StaticPartitionPolicy", "TallyPriorityPolicy",
+]

@@ -1,0 +1,190 @@
+"""SharingPolicy registry contract suite.
+
+Every registered policy — current and future — must satisfy the array
+contract (`shared_performance` shapes/bounds, `sm_shares` in [0, 1],
+`scheduler_config` typing) and run end-to-end through the engine; the
+registry itself must resolve strings, instances, and aliases, and fail
+loudly (a real ValueError listing the available names, never an assert) on
+unknown policies.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.interference import (OFFLINE_MODEL_PROFILES,
+                                     offline_profile_arrays,
+                                     online_profile_arrays)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import ClusterSim, SimConfig, run_policy
+from repro.core.traces import SERVICES
+from repro.policies import (MuxFlowPolicy, SharingPolicy, available,
+                            register, resolve, unregister)
+
+TINY = dict(n_devices=16, horizon_s=3600.0, tick_s=60.0, trace="B", seed=5)
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    from repro.core.predictor import build_speed_predictor
+    return build_speed_predictor(gpu_types=("T4", "A10"), n=150, epochs=5)
+
+
+def _fleet_arrays(n=32, seed=0):
+    """Synthetic per-device online/offline profile arrays for a small fleet
+    spanning every service and offline model."""
+    rng = np.random.default_rng(seed)
+    sidx = np.arange(n) % len(SERVICES)
+    qps = rng.uniform(1.0, 160.0, n)
+    on = online_profile_arrays(sidx, qps, SERVICES)
+    models = tuple(OFFLINE_MODEL_PROFILES)
+    off = offline_profile_arrays(rng.integers(0, len(models), n), models)
+    shares = rng.uniform(0.1, 0.9, n)
+    return on, off, shares
+
+
+@pytest.mark.parametrize("name", available())
+def test_policy_array_contract(name):
+    pol = resolve(name)
+    n = 32
+    on, off, shares = _fleet_arrays(n)
+    slow, tput = pol.shared_performance(on, off, shares)
+    assert slow.shape == (n,) and tput.shape == (n,)
+    assert np.all(slow >= 1.0), f"{name}: slowdown below 1.0"
+    assert np.all((tput >= 0.0) & (tput <= 1.0)), f"{name}: tput outside [0,1]"
+    idx = np.arange(0, n, 3)
+    sh = pol.sm_shares(on, idx)
+    assert sh.shape == idx.shape
+    assert np.all((sh >= 0.0) & (sh <= 1.0))
+    sc = pol.scheduler_config(shard_size=128)
+    assert sc is None or isinstance(sc, SchedulerConfig)
+    if sc is not None:
+        assert sc.shard_size == 128
+
+
+@pytest.mark.parametrize("name", available())
+def test_every_policy_runs_end_to_end(name, predictor):
+    pol = resolve(name)
+    r = run_policy(name, predictor if pol.needs_predictor else None, **TINY)
+    assert r.policy == name
+    assert r.avg_slowdown >= 1.0 - 1e-9
+    assert 0.0 <= r.oversold_gpu <= 1.0
+    # policy tput is in [0,1]; the engine then scales by hardware speed
+    # (A10 = 1.35x in the default fleet)
+    assert 0.0 <= r.avg_norm_tput <= 1.35
+
+
+def test_dedicated_is_exactly_idle():
+    on, off, shares = _fleet_arrays()
+    pol = resolve("online-only")
+    slow, tput = pol.shared_performance(on, off, shares)
+    assert np.all(slow == 1.0) and np.all(tput == 0.0)
+    assert not pol.wants_scheduling
+
+
+def test_dedicated_alias():
+    assert resolve("dedicated") is resolve("online-only")
+    assert "dedicated" not in available()       # canonical names only
+
+
+def test_unknown_policy_error_lists_available():
+    with pytest.raises(ValueError) as ei:
+        run_policy("no-such-policy", **TINY)
+    msg = str(ei.value)
+    for name in available():
+        assert name in msg
+
+
+def test_engine_raises_valueerror_not_assert():
+    """ISSUE 3 satellite: registry resolution is a real ValueError from
+    ClusterSim construction (asserts vanish under ``python -O``)."""
+    with pytest.raises(ValueError, match="available"):
+        ClusterSim(SimConfig(policy="bogus"))
+
+
+def test_predictor_requirement_enforced():
+    with pytest.raises(ValueError, match="needs a speed predictor"):
+        run_policy("muxflow", None, **TINY)
+
+
+def test_string_vs_instance_byte_identical(predictor):
+    """A registry-resolved name and a freshly constructed policy instance
+    must produce byte-identical SimResults."""
+    a = run_policy("muxflow", predictor, **TINY)
+    b = run_policy(MuxFlowPolicy(), predictor, **TINY)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_register_custom_policy_roundtrip():
+    """The README's "add your own policy" path: subclass, register, run by
+    name — no engine edits."""
+
+    class FiftyFifty(SharingPolicy):
+        name = "test-fifty-fifty"
+        description = "test-only: constant half-speed sharing"
+
+        def shared_performance(self, on, off, shares):
+            n = on["gpu_util"].shape[0]
+            return np.full(n, 1.1), np.full(n, 0.5)
+
+    pol = register(FiftyFifty())
+    try:
+        assert "test-fifty-fifty" in available()
+        r = run_policy("test-fifty-fifty", **TINY)
+        assert r.policy == "test-fifty-fifty"
+        # 0.5 per device, scaled by hardware speed (T4 1.0x / A10 1.35x)
+        assert 0.5 - 1e-9 <= r.avg_norm_tput <= 0.5 * 1.35 + 1e-9
+        # duplicate name bound to a different object must be rejected
+        with pytest.raises(ValueError, match="already registered"):
+            register(FiftyFifty())
+        register(pol)                       # same object: idempotent
+    finally:
+        unregister("test-fifty-fifty")
+    assert "test-fifty-fifty" not in available()
+
+
+class _TmpPolicy(SharingPolicy):
+    name = "test-tmp"
+
+    def shared_performance(self, on, off, shares):
+        n = on["gpu_util"].shape[0]
+        return np.ones(n), np.zeros(n)
+
+
+def test_unregister_removes_aliases_too():
+    """available() must never advertise a name resolve() would reject:
+    removing a policy via any of its keys drops all of them."""
+    register(_TmpPolicy(), aliases=("test-tmp-alias",))
+    try:
+        assert resolve("test-tmp-alias") is resolve("test-tmp")
+    finally:
+        unregister("test-tmp-alias")
+    assert "test-tmp" not in available()
+    with pytest.raises(ValueError):
+        resolve("test-tmp")
+    with pytest.raises(ValueError):
+        resolve("test-tmp-alias")
+
+
+def test_register_rejects_unnamed_policy():
+    """Forgetting the `name` class attribute fails fast at register() time
+    instead of binding the policy under the base-class placeholder."""
+
+    class Nameless(SharingPolicy):
+        def shared_performance(self, on, off, shares):
+            n = on["gpu_util"].shape[0]
+            return np.ones(n), np.zeros(n)
+
+    with pytest.raises(ValueError, match="must set a unique `name`"):
+        register(Nameless())
+    assert "unnamed" not in available()
+
+
+def test_register_is_atomic_on_alias_collision():
+    """A rejected registration (alias colliding with an existing name) must
+    leave the registry untouched — no half-registered policy."""
+    with pytest.raises(ValueError, match="already registered"):
+        register(_TmpPolicy(), aliases=("muxflow",))
+    assert "test-tmp" not in available()
+    with pytest.raises(ValueError):
+        resolve("test-tmp")

@@ -10,6 +10,7 @@ import pytest
 from repro.core.predictor import build_speed_predictor
 from repro.core.simulator import ClusterSim, SimConfig
 from repro.core.simulator_legacy import LegacyClusterSim
+from repro.policies import resolve
 
 CFG = dict(n_devices=50, horizon_s=4 * 3600.0, tick_s=30.0, trace="B",
            seed=12345)
@@ -28,7 +29,7 @@ def predictor():
 
 def _run_pair(policy, predictor, **overrides):
     kwargs = {**CFG, **overrides}
-    p = predictor if policy.startswith("muxflow") else None
+    p = predictor if resolve(policy).needs_predictor else None
     vec = ClusterSim(SimConfig(policy=policy, **kwargs), p).run()
     ref = LegacyClusterSim(SimConfig(policy=policy, **kwargs), p).run()
     return vec, ref

@@ -6,6 +6,7 @@ import jax
 
 from repro.core.predictor import build_speed_predictor
 from repro.core.simulator import ClusterSim, SimConfig, run_policy
+from repro.policies import resolve
 
 FAST = dict(n_devices=40, horizon_s=3 * 3600.0, tick_s=60.0, trace="B", seed=3)
 
@@ -20,8 +21,8 @@ def results(predictor):
     out = {}
     for pol in ("online-only", "muxflow", "pb-time-sharing", "time-sharing",
                 "muxflow-s-m"):
-        out[pol] = run_policy(pol, predictor if pol.startswith("muxflow") else None,
-                              **FAST)
+        out[pol] = run_policy(
+            pol, predictor if resolve(pol).needs_predictor else None, **FAST)
     return out
 
 
