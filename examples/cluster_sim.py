@@ -25,9 +25,16 @@ def main() -> None:
     print("-" * len(header))
     for pol in ("online-only", "muxflow", "muxflow-s", "muxflow-m",
                 "muxflow-s-m", "pb-time-sharing", "time-sharing",
-                "tally-priority", "static-partition"):
-        r = run_policy_scenario(
-            pol, pred if resolve(pol).needs_predictor else None, **cfg)
+                "tally-priority", "static-partition", "muxflow-measured"):
+        p = resolve(pol)
+        use = None
+        if p.needs_predictor:
+            # the measured policy trains its own predictor on profiled pairs
+            # (SharingPolicy.build_predictor); everything else shares the
+            # synthetic one built above
+            use = (p.build_predictor(("T4", "A10"), samples=600, epochs=20)
+                   if pol == "muxflow-measured" else pred)
+        r = run_policy_scenario(pol, use, **cfg)
         print(f"{pol:18s} {r.avg_slowdown:>10.3f}x {r.p99_latency_ms:>8.1f} "
               f"{r.avg_jct_s/60:>7.1f}mn {r.n_finished:>4d}/{r.n_jobs:<4d} "
               f"{r.oversold_gpu:>8.3f} {r.gpu_util:>5.2f} "

@@ -97,12 +97,15 @@ class ControlPlane:
         self.scenario = sc
         self.bus = EventBus(keep_log=sc.keep_event_log)
         self.fleet = FleetSpec(sc.n_devices, sc.pools) if sc.pools else None
-        if predictor is None and resolve_policy(sc.policy).needs_predictor:
-            from repro.core.predictor import build_speed_predictor
+        pol = resolve_policy(sc.policy)
+        if predictor is None and pol.needs_predictor:
+            # the policy owns predictor construction (SharingPolicy.
+            # build_predictor): synthetic-model training by default,
+            # measured-pair training for calibrated policies
             gpu_types = (self.fleet.gpu_types if self.fleet
                          else tuple(dict.fromkeys(sc.gpu_types)))
-            predictor = build_speed_predictor(
-                gpu_types=gpu_types, n=sc.predictor_samples,
+            predictor = pol.build_predictor(
+                gpu_types, samples=sc.predictor_samples,
                 epochs=sc.predictor_epochs, seed=0)
         cfg = SimConfig(
             policy=sc.policy, n_devices=sc.n_devices,

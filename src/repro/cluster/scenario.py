@@ -137,6 +137,14 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
         policy="tally-priority", trace="B", pools=_HETERO_POOLS,
         agents=AgentConfig()),
     Scenario(
+        name="calibrated",
+        description="Measured-interference campaign: the muxflow-measured "
+                    "policy replays the profiled speed matrix (executed "
+                    "jax_pallas workload pairs) as engine ground truth and "
+                    "schedules with a measured-trained predictor.",
+        policy="muxflow-measured", trace="B", pools=_HETERO_POOLS,
+        agents=AgentConfig()),
+    Scenario(
         name="mig-partition",
         description="ParvaGPU-style static spatial partitioning under heavy "
                     "trace-D load: a fixed MIG-like SM split isolates every "

@@ -10,6 +10,12 @@ SM and memory-bandwidth contention calibrated against the paper's Figure 4:
 
 The workload profile mirrors the paper's predictor features: GPU utilization,
 SM activity, SM occupancy, and separate execution time.
+
+This model is the *synthetic* ground truth.  Its measured counterpart —
+:class:`repro.profiling.calibrate.MeasuredInterferenceProvider`, built from
+executed workload pairs — is call-compatible with
+:func:`shared_performance_arrays` and backs the ``muxflow-measured`` policy
+and the ``calibrated`` cluster scenario.
 """
 from __future__ import annotations
 

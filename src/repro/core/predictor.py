@@ -19,9 +19,28 @@ from repro.optim.optimizer import MomentumSGD, MomentumSGDConfig
 
 N_FEATURES = 9  # on: util, sm_act, occ, time | off: util, sm_act, occ, time | sm%
 
+# The documented feature contract (per-column [low, high]): occupancy-style
+# features live in [0, 1]; the two separate-execution times are in seconds
+# and bounded by 10 s (no profiled iteration/request is longer); the
+# assigned SM share is a fraction.  ``pair_features`` output must stay in
+# these ranges for every valid profile pair — the property tests in
+# tests/test_profiling.py pin this.
+FEATURE_RANGES = np.array([
+    [0.0, 1.0],    # online gpu_util
+    [0.0, 1.0],    # online sm_activity
+    [0.0, 1.0],    # online sm_occupancy
+    [0.0, 10.0],   # online exec time (s)
+    [0.0, 1.0],    # offline gpu_util
+    [0.0, 1.0],    # offline sm_activity
+    [0.0, 1.0],    # offline sm_occupancy
+    [0.0, 10.0],   # offline exec time (s)
+    [0.0, 1.0],    # assigned offline SM share
+], np.float32)
+
 
 def pair_features(online: WorkloadProfile, offline: WorkloadProfile,
                   sm_off: float) -> np.ndarray:
+    """The predictor's input row — see ``FEATURE_RANGES`` for the contract."""
     return np.array([
         online.gpu_util, online.sm_activity, online.sm_occupancy,
         online.exec_time_ms / 1000.0,

@@ -1,53 +1,18 @@
-"""Workload profiler (§3): when an offline workload is first submitted it is
-dry-run for a few iterations on a dedicated device; the measured execution
-info feeds the speed predictor.  Works on real step callables (timed) or on
-trace metadata (simulated).
+"""Deprecated shim — the workload profiler moved to
+:mod:`repro.profiling.workloads` (the single metrics-sampling path).
+
+``ProfileStore``, ``profile_step_fn`` and ``profile_from_trace`` are
+re-exported unchanged so existing imports keep working; new code should use
+the catalog (:func:`repro.profiling.workloads.build_catalog` /
+:func:`~repro.profiling.workloads.execute`) instead.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable
+import warnings
 
-from repro.core.interference import OFFLINE_MODEL_PROFILES, WorkloadProfile
+from repro.profiling.workloads import (ProfileStore, profile_from_trace,  # noqa: F401
+                                       profile_step_fn)
 
-
-@dataclasses.dataclass
-class ProfileStore:
-    """The paper stores measured profiles in a database keyed by workload."""
-    profiles: dict = dataclasses.field(default_factory=dict)
-
-    def get(self, key: str) -> WorkloadProfile | None:
-        return self.profiles.get(key)
-
-    def put(self, key: str, profile: WorkloadProfile) -> None:
-        self.profiles[key] = profile
-
-
-def profile_step_fn(step_fn: Callable[[], None], *, name: str,
-                    warmup: int = 2, iters: int = 5,
-                    flops_per_step: float = 0.0,
-                    bytes_per_step: float = 0.0,
-                    peak_flops: float = 197e12,
-                    peak_bw: float = 819e9,
-                    mem_bytes: int = 0,
-                    device_bytes: int = 16 << 30) -> WorkloadProfile:
-    """Run a few iterations and derive the profile features.  On CPU the
-    'SM activity' analogue is estimated from the step's achieved FLOP and
-    byte rates against the device peaks (duty fractions)."""
-    for _ in range(warmup):
-        step_fn()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        step_fn()
-    dt = (time.perf_counter() - t0) / iters
-    compute_frac = min(1.0, (flops_per_step / peak_flops) / max(dt, 1e-9))
-    bw_frac = min(1.0, (bytes_per_step / peak_bw) / max(dt, 1e-9))
-    return WorkloadProfile(
-        name=name, gpu_util=0.95, sm_activity=max(compute_frac, 0.05),
-        sm_occupancy=0.5, mem_bw=max(bw_frac, 0.05), exec_time_ms=dt * 1e3,
-        mem_bytes_frac=mem_bytes / device_bytes)
-
-
-def profile_from_trace(model: str) -> WorkloadProfile:
-    return OFFLINE_MODEL_PROFILES[model]
+warnings.warn(
+    "repro.core.profiler is deprecated; use repro.profiling.workloads",
+    DeprecationWarning, stacklevel=2)

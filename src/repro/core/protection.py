@@ -14,6 +14,39 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Protocol
+
+
+class Clock(Protocol):
+    """Injectable time source for the PID/duty loop and telemetry buffers.
+
+    Production uses :class:`WallClock`; profiling runs and tests inject a
+    :class:`VirtualClock` so every timestamp and PID ``dt`` is an exact
+    function of the inputs (no ``time.time()`` in the control loops)."""
+
+    def time(self) -> float: ...
+
+
+class WallClock:
+    """The default clock: real wall time."""
+
+    @staticmethod
+    def time() -> float:
+        return time.time()
+
+
+class VirtualClock:
+    """Deterministic, manually advanced clock."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def time(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        self._t += float(dt)
+        return self._t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,11 +147,14 @@ class KernelThrottle:
     """
 
     def __init__(self, pid: PIDController | None = None,
-                 clock_cfg: ClockFactorConfig = ClockFactorConfig()):
+                 clock_cfg: ClockFactorConfig = ClockFactorConfig(),
+                 clock: Clock | None = None):
         self.pid = pid or PIDController()
         self.clock_cfg = clock_cfg
+        self.clock = clock or WallClock()
         self.duty = self.pid.output       # offline duty fraction in [0,1]
         self._credit = 0.0
+        self._last_obs: float | None = None
         self.frozen = False               # graceful-exit freeze (§4.2)
 
     def observe(self, u_sm: float, c_sm: float, dt: float = 1.0) -> float:
@@ -126,6 +162,28 @@ class KernelThrottle:
         load = gpu_load(u_sm, clock_factor(c_sm, self.clock_cfg))
         self.duty = self.pid.update(load, dt)
         return self.duty
+
+    # below this, a sample is coalesced into the previous one: feeding the
+    # PID a near-zero dt would blow up the derivative term (error delta
+    # divided by dt) and slam the duty to a rail
+    MIN_OBSERVE_DT_S = 1e-3
+
+    def observe_now(self, u_sm: float, c_sm: float) -> float:
+        """Feed telemetry stamped by the injected clock: ``dt`` is the time
+        since the previous observation (1.0 on the first).  The duty loop
+        never reads wall time directly — swap in a :class:`VirtualClock` and
+        the whole PID trajectory is deterministic.  Samples arriving within
+        ``MIN_OBSERVE_DT_S`` of the previous one are dropped (duty
+        unchanged) rather than fed to the PID with an explosive dt."""
+        now = self.clock.time()
+        if self._last_obs is None:
+            dt = 1.0
+        else:
+            dt = now - self._last_obs
+            if dt < self.MIN_OBSERVE_DT_S:
+                return self.duty
+        self._last_obs = now
+        return self.observe(u_sm, c_sm, dt)
 
     def should_launch(self, quantum: float = 1.0) -> bool:
         """Credit-based gate: offline work may take `duty` fraction of time."""
@@ -157,9 +215,19 @@ class GPUMonitor:
     """Rolling telemetry buffer: 'stores the metrics for only several minutes
     because old data ... are useless for timely workload management.'"""
 
-    def __init__(self, horizon_s: float = 300.0):
+    def __init__(self, horizon_s: float = 300.0, clock: Clock | None = None):
         self.horizon_s = horizon_s
+        self.clock = clock or WallClock()
         self.samples: list[DeviceTelemetry] = []
+
+    def sample(self, gpu_util: float, sm_activity: float, sm_clock: float,
+               mem_used_frac: float, **kw) -> DeviceTelemetry:
+        """Record a sample stamped by the injected clock."""
+        s = DeviceTelemetry(ts=self.clock.time(), gpu_util=gpu_util,
+                            sm_activity=sm_activity, sm_clock=sm_clock,
+                            mem_used_frac=mem_used_frac, **kw)
+        self.record(s)
+        return s
 
     def record(self, sample: DeviceTelemetry) -> None:
         self.samples.append(sample)

@@ -26,10 +26,16 @@ from repro.policies.builtin import (DedicatedPolicy, MuxFlowPolicy,
                                     PriorityTimeSharingPolicy,
                                     TimeSharingPolicy)
 from repro.policies.extra import StaticPartitionPolicy, TallyPriorityPolicy
+# registered last: the measured policy lives in repro.profiling (it wraps
+# the speed-matrix artifact) and only touches repro.policies.base, so the
+# import graph stays acyclic in both import orders
+from repro.profiling.calibrate import register_measured_policy
+
+MEASURED_MUXFLOW = register_measured_policy()
 
 __all__ = [
     "SharingPolicy", "available", "policy_name", "register", "resolve",
     "unregister", "DedicatedPolicy", "MuxFlowPolicy",
     "PriorityTimeSharingPolicy", "TimeSharingPolicy",
-    "StaticPartitionPolicy", "TallyPriorityPolicy",
+    "StaticPartitionPolicy", "TallyPriorityPolicy", "MEASURED_MUXFLOW",
 ]

@@ -67,6 +67,21 @@ class SharingPolicy:
         """
         return np.full(idx.shape, 0.5, np.float64)
 
+    def build_predictor(self, gpu_types, *, samples: int = 2000,
+                        epochs: int = 120, seed: int = 0):
+        """Train the §5 speed predictor this policy schedules with.
+
+        Only consulted when ``needs_predictor`` is True and the caller (the
+        control plane, a benchmark) did not supply a predictor.  The default
+        trains on the synthetic interference model; measured policies
+        (``muxflow-measured``) override this to train on profiled pairs, so
+        the predictor's training distribution always matches the policy's
+        ground truth.
+        """
+        from repro.core.predictor import build_speed_predictor
+        return build_speed_predictor(gpu_types=tuple(gpu_types), n=samples,
+                                     epochs=epochs, seed=seed)
+
     # ----------------------------------------------------------- performance
     def shared_performance(self, on: dict[str, np.ndarray],
                            off: dict[str, np.ndarray],

@@ -1,0 +1,45 @@
+"""repro.profiling — measured workload profiling & simulator calibration.
+
+The subsystem that grounds the simulator in executed jax_pallas kernels:
+
+  * :mod:`repro.profiling.workloads` — the catalog of real executables
+    (flash-attention prefill, decode-attention serving, SSM scan, LM train
+    step) as named, seeded, role-tagged :class:`Workload` records, plus the
+    single metrics-sampling path (absorbing the old ``core/profiler.py``).
+  * :mod:`repro.profiling.harness` — the pair-profiling harness: executed
+    workloads co-located under emulated SM shares (duty-cycle throttling via
+    the ``protection.py`` PID seam, telemetry through ``SysMonitor``).
+  * :mod:`repro.profiling.matrix` — the versioned, schema-checked,
+    byte-reproducible speed-matrix artifact.
+  * :mod:`repro.profiling.calibrate` — :class:`MeasuredInterferenceProvider`
+    (drop-in for the analytic ``shared_performance_arrays``), measured
+    predictor training, and the ``muxflow-measured`` sharing policy behind
+    the ``calibrated`` cluster scenario.
+
+CLI: ``python -m repro.profiling.run --suite smoke`` (see ``--help``).
+"""
+from repro.profiling.calibrate import (MeasuredInterferenceProvider,
+                                       build_measured_predictor,
+                                       default_matrix, make_measured_dataset,
+                                       predict_share_curve,
+                                       register_measured_policy,
+                                       workload_profile)
+from repro.profiling.harness import (SUITES, PairProfiler, SuiteConfig,
+                                     build_speed_matrix)
+from repro.profiling.matrix import SCHEMA, SpeedMatrix, check_schema
+from repro.profiling.workloads import (ExecutionRecord, ProfileStore,
+                                       Workload, build_catalog,
+                                       catalog_by_role, execute,
+                                       profile_from_trace, profile_step_fn)
+
+MEASURED_MUXFLOW = register_measured_policy()
+
+__all__ = [
+    "SUITES", "SCHEMA", "ExecutionRecord", "MeasuredInterferenceProvider",
+    "PairProfiler", "ProfileStore", "SpeedMatrix", "SuiteConfig", "Workload",
+    "build_catalog", "build_measured_predictor", "build_speed_matrix",
+    "catalog_by_role", "check_schema", "default_matrix", "execute",
+    "make_measured_dataset", "predict_share_curve", "profile_from_trace",
+    "profile_step_fn", "register_measured_policy", "workload_profile",
+    "MEASURED_MUXFLOW",
+]

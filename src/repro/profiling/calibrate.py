@@ -1,0 +1,298 @@
+"""Calibration: turn a measured speed matrix into simulator ground truth.
+
+Three artifacts come out of a :class:`~repro.profiling.matrix.SpeedMatrix`:
+
+  * :class:`MeasuredInterferenceProvider` — a drop-in for
+    :func:`repro.core.interference.shared_performance_arrays`: per-device
+    profile arrays in, (online slowdown, offline throughput) out, but looked
+    up from measured pair grids (nearest measured workload by profile
+    distance, linear interpolation along the share axis) instead of the
+    closed-form contention model.
+  * a measured predictor training set (:func:`make_measured_dataset`) and
+    per-GPU-type trained MLPs (:func:`build_measured_predictor`), so the §5
+    speed predictor can train on measurements instead of on the very formula
+    it is later evaluated against (the Fig. 12 circularity the seed had).
+  * :class:`MeasuredMuxFlowPolicy` — MuxFlow scheduling (dynamic SM + KM
+    matching) with measured shared-performance and a measured-trained
+    predictor, registered as ``muxflow-measured`` and wired to the
+    ``calibrated`` cluster scenario.
+
+The default matrix is built lazily from the smoke suite (and memoized), so
+``python -m repro.cluster.run --scenario calibrated`` is self-contained; set
+``REPRO_SPEED_MATRIX=/path/to/matrix.json`` to calibrate from a saved
+artifact (e.g. one produced on a testbed by ``python -m
+repro.profiling.run --suite full``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core.interference import WorkloadProfile
+from repro.profiling.matrix import SpeedMatrix
+
+_MATCH_KEYS = ("gpu_util", "sm_activity", "mem_bw")
+
+_DEFAULT_MATRICES: dict[tuple[str, int], SpeedMatrix] = {}
+
+
+def default_matrix(suite: str = "smoke", seed: int = 0) -> SpeedMatrix:
+    """The process-wide default matrix: ``$REPRO_SPEED_MATRIX`` if set,
+    otherwise built from the named suite once and memoized."""
+    path = os.environ.get("REPRO_SPEED_MATRIX")
+    if path:
+        return SpeedMatrix.load(path)
+    key = (suite, seed)
+    if key not in _DEFAULT_MATRICES:
+        from repro.profiling.harness import build_speed_matrix
+        _DEFAULT_MATRICES[key] = build_speed_matrix(suite, seed=seed)
+    return _DEFAULT_MATRICES[key]
+
+
+def workload_profile(matrix: SpeedMatrix, name: str) -> WorkloadProfile:
+    """Reconstruct a measured workload's separate-execution profile."""
+    p = matrix.workloads[name]["profile"]
+    return WorkloadProfile(name=name, **p)
+
+
+class MeasuredInterferenceProvider:
+    """Vectorized measured shared-performance lookup.
+
+    Call signature matches
+    :func:`repro.core.interference.shared_performance_arrays` — ``on``/``off``
+    are ``[key] -> (n,) array`` mappings, ``sm_off`` the per-device share —
+    so any :class:`~repro.policies.base.SharingPolicy` can swap it in.  Each
+    device is matched to its nearest measured online and offline workload by
+    Euclidean distance over (gpu_util, sm_activity, mem_bw); the pair's
+    measured slowdown/throughput grids are then linearly interpolated at the
+    assigned share (clamped to the measured sweep at the ends).
+    """
+
+    def __init__(self, matrix: SpeedMatrix):
+        self.matrix = matrix
+        roles = {"online": [], "offline": []}
+        for name, w in matrix.workloads.items():
+            roles[w["role"]].append(name)
+        self.online_names = sorted(roles["online"])
+        self.offline_names = sorted(roles["offline"])
+        if not self.online_names or not self.offline_names:
+            raise ValueError("speed matrix must measure both roles")
+
+        def feats(names):
+            return np.array([[matrix.workloads[n]["profile"][k]
+                              for k in _MATCH_KEYS] for n in names])
+
+        self._on_feats = feats(self.online_names)
+        self._off_feats = feats(self.offline_names)
+        self._grids: dict[tuple[int, int], tuple] = {}
+        for i, on in enumerate(self.online_names):
+            for j, off in enumerate(self.offline_names):
+                p = matrix.pair(on, off)
+                self._grids[(i, j)] = (np.asarray(p["shares"], np.float64),
+                                       np.asarray(p["online_slowdown"],
+                                                  np.float64),
+                                       np.asarray(p["offline_tput"],
+                                                  np.float64))
+
+    @staticmethod
+    def _nearest(feats: np.ndarray, measured: np.ndarray) -> np.ndarray:
+        # (n, 3) vs (m, 3) -> (n,) argmin over squared distance
+        d2 = ((feats[:, None, :] - measured[None, :, :]) ** 2).sum(axis=2)
+        return np.argmin(d2, axis=1)
+
+    def __call__(self, on, off, sm_off) -> tuple[np.ndarray, np.ndarray]:
+        sm_off = np.clip(np.asarray(sm_off, np.float64), 0.0, 1.0)
+        on_f = np.stack([np.asarray(on[k], np.float64) for k in _MATCH_KEYS],
+                        axis=1)
+        off_f = np.stack([np.asarray(off[k], np.float64) for k in _MATCH_KEYS],
+                         axis=1)
+        oi = self._nearest(on_f, self._on_feats)
+        oj = self._nearest(off_f, self._off_feats)
+        slowdown = np.ones(sm_off.shape, np.float64)
+        tput = np.zeros(sm_off.shape, np.float64)
+        pair_code = oi * len(self.offline_names) + oj
+        for (i, j), (grid, slow_g, tput_g) in self._grids.items():
+            mask = pair_code == i * len(self.offline_names) + j
+            if not mask.any():
+                continue
+            slowdown[mask] = np.interp(sm_off[mask], grid, slow_g)
+            tput[mask] = np.interp(sm_off[mask], grid, tput_g)
+        return np.maximum(slowdown, 1.0), np.clip(tput, 0.0, 1.0)
+
+    # alias so the provider reads as a drop-in at call sites
+    shared_performance_arrays = __call__
+
+
+# ---------------------------------------------------------------------------
+# Measured predictor training
+# ---------------------------------------------------------------------------
+
+def make_measured_dataset(matrix: SpeedMatrix, rng: np.random.Generator,
+                          n: int = 2000, noise: float = 0.01,
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Predictor training pairs from the measured grids: random (pair,
+    share) samples with the measured throughput (interpolated along the
+    share sweep) as target.  Profile features are mildly jittered so the
+    MLP sees a family around each measured workload, the way the synthetic
+    ``make_dataset`` covers a family around each paper profile."""
+    from repro.core.predictor import pair_features
+    provider = MeasuredInterferenceProvider(matrix)
+    feats, targets = [], []
+    for _ in range(n):
+        on_name = provider.online_names[
+            rng.integers(len(provider.online_names))]
+        off_name = provider.offline_names[
+            rng.integers(len(provider.offline_names))]
+        pair = matrix.pair(on_name, off_name)
+        share = float(rng.uniform(0.05, 1.0))
+        target = float(np.interp(share, pair["shares"],
+                                 pair["offline_tput"]))
+        on_p = workload_profile(matrix, on_name)
+        off_p = workload_profile(matrix, off_name)
+
+        def jitter(p):
+            return dataclasses.replace(
+                p,
+                gpu_util=float(np.clip(p.gpu_util * rng.uniform(0.9, 1.1),
+                                       0.0, 1.0)),
+                sm_activity=float(np.clip(
+                    p.sm_activity * rng.uniform(0.9, 1.1), 0.05, 1.0)),
+                exec_time_ms=p.exec_time_ms * float(rng.uniform(0.9, 1.1)))
+
+        feats.append(pair_features(jitter(on_p), jitter(off_p), share))
+        targets.append(target + rng.normal(0.0, noise))
+    return np.stack(feats), np.clip(np.array(targets, np.float32), 0.0, 1.0)
+
+
+def build_measured_predictor(matrix: SpeedMatrix, gpu_types=("T4", "A10"),
+                             n: int = 2000, epochs: int = 120, seed: int = 0):
+    """Train one MLP per GPU type on the measured dataset (same
+    architecture/optimizer as the synthetic path, different ground truth)."""
+    import jax
+
+    from repro.core.predictor import SpeedPredictor, train_predictor
+    params_by_type = {}
+    for i, t in enumerate(gpu_types):
+        rng = np.random.default_rng(seed + i)
+        feats, targets = make_measured_dataset(matrix, rng, n=n)
+        params, _ = train_predictor(jax.random.PRNGKey(seed + i), feats,
+                                    targets, epochs=epochs, seed=seed + i)
+        params_by_type[t] = params
+    return SpeedPredictor(params_by_type)
+
+
+def predict_share_curve(predictor, gpu_type: str, online: WorkloadProfile,
+                        offline: WorkloadProfile,
+                        shares: np.ndarray) -> np.ndarray:
+    """Predicted offline throughput across a share sweep, monotone
+    non-decreasing by construction.
+
+    More SM share can never make the offline workload slower (the measured
+    grids are monotone up to sampling noise), so the calibrated prediction
+    surface takes the isotonic envelope (running max) of the raw MLP outputs
+    along the share axis — the property tests pin this contract."""
+    from repro.core.predictor import pair_features
+    shares = np.asarray(shares, np.float64)
+    order = np.argsort(shares)
+    feats = np.stack([pair_features(online, offline, float(s))
+                      for s in shares[order]])
+    raw = np.asarray(predictor.predict(gpu_type, feats), np.float64)
+    iso = np.maximum.accumulate(raw)
+    out = np.empty_like(iso)
+    out[order] = iso
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The calibrated policy
+# ---------------------------------------------------------------------------
+
+class MeasuredMuxFlowPolicy:
+    """MuxFlow scheduling with measured shared-performance.
+
+    Same dynamic-SM + KM-matching scheduling as ``muxflow``, but the
+    engine's per-tick ground truth comes from the profiled speed matrix via
+    :class:`MeasuredInterferenceProvider`, and the speed predictor it
+    schedules with trains on measured pairs.  With no matrix supplied the
+    smoke-suite default is built lazily on first use (or loaded from
+    ``$REPRO_SPEED_MATRIX``).
+
+    (Declared as a :class:`~repro.policies.base.SharingPolicy` subclass at
+    registration time — see the bottom of this module — to keep this
+    module's import graph one-directional into ``repro.policies.base``.)
+    """
+
+    name = "muxflow-measured"
+    description = ("MuxFlow with measured interference: speed matrix from "
+                   "executed workload pairs replaces the analytic "
+                   "contention model; predictor trains on measurements.")
+    needs_predictor = True
+    wants_scheduling = True
+
+    def __init__(self, matrix: SpeedMatrix | None = None,
+                 suite: str = "smoke"):
+        self._matrix = matrix
+        self._pinned = matrix is not None     # explicit matrix wins over env
+        self._env_src: str | None = None
+        self._suite = suite
+        self._provider: MeasuredInterferenceProvider | None = None
+
+    @property
+    def matrix(self) -> SpeedMatrix:
+        if self._pinned:
+            return self._matrix
+        # the registry holds one process-wide instance, so the memo must
+        # track $REPRO_SPEED_MATRIX: setting/changing/unsetting it between
+        # runs swaps the calibration source instead of being silently
+        # ignored in favor of a stale matrix
+        src = os.environ.get("REPRO_SPEED_MATRIX")
+        if self._matrix is None or src != self._env_src:
+            self._env_src = src
+            self._matrix = default_matrix(self._suite)
+            self._provider = None
+        return self._matrix
+
+    @property
+    def provider(self) -> MeasuredInterferenceProvider:
+        matrix = self.matrix            # may invalidate self._provider
+        if self._provider is None:
+            self._provider = MeasuredInterferenceProvider(matrix)
+        return self._provider
+
+    def scheduler_config(self, shard_size: int = 256):
+        from repro.core.scheduler import SchedulerConfig
+        return SchedulerConfig(use_dynamic_sm=True, use_matching=True,
+                               shard_size=shard_size)
+
+    def sm_shares(self, on, idx):
+        from repro.core.dynamic_sm import dynamic_sm_array
+        return dynamic_sm_array(on["sm_activity"][idx])
+
+    def shared_performance(self, on, off, shares):
+        return self.provider(on, off, shares)
+
+    def build_predictor(self, gpu_types, *, samples: int = 2000,
+                        epochs: int = 120, seed: int = 0):
+        return build_measured_predictor(self.matrix, gpu_types, n=samples,
+                                        epochs=epochs, seed=seed)
+
+
+def register_measured_policy():
+    """Idempotently register ``muxflow-measured`` (done on package import).
+
+    The concrete registered class mixes :class:`MeasuredMuxFlowPolicy` over
+    ``SharingPolicy`` here, lazily, so importing this module never imports
+    the policy package back (one-directional import graph)."""
+    global MeasuredMuxFlowPolicy
+    from repro.policies.base import SharingPolicy, register, resolve
+    if not issubclass(MeasuredMuxFlowPolicy, SharingPolicy):
+        MeasuredMuxFlowPolicy = type("MeasuredMuxFlowPolicy",
+                                     (MeasuredMuxFlowPolicy, SharingPolicy),
+                                     {"__doc__": MeasuredMuxFlowPolicy.__doc__})
+    try:
+        return resolve("muxflow-measured")
+    except ValueError:
+        return register(MeasuredMuxFlowPolicy(),
+                        aliases=("calibrated-muxflow",))

@@ -1,10 +1,12 @@
-"""xCUDA analogue: GPU-load law (Eq. 1–2), PID stability, quota ledger."""
+"""xCUDA analogue: GPU-load law (Eq. 1–2), PID stability, quota ledger,
+injectable-clock determinism."""
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.protection import (ClockFactorConfig, KernelThrottle,
-                                   MemoryQuota, PIDConfig, PIDController,
-                                   QuotaExceeded, clock_factor, gpu_load)
+from repro.core.protection import (ClockFactorConfig, GPUMonitor,
+                                   KernelThrottle, MemoryQuota, PIDConfig,
+                                   PIDController, QuotaExceeded, VirtualClock,
+                                   WallClock, clock_factor, gpu_load)
 
 
 def test_clock_factor_piecewise():
@@ -90,3 +92,56 @@ def test_throttle_responds_to_clock_drop():
     for _ in range(50):
         th.observe(u_sm=0.5, c_sm=1000.0)   # depressed clock -> load spikes
     assert th.duty < duty_ok
+
+
+def test_throttle_defaults_to_wall_clock():
+    assert isinstance(KernelThrottle().clock, WallClock)
+
+
+def test_observe_now_virtual_clock_deterministic():
+    """The PID/duty loop never reads wall time: with a VirtualClock the whole
+    duty trajectory is an exact function of the telemetry sequence."""
+    def trajectory():
+        clock = VirtualClock()
+        th = KernelThrottle(clock=clock)
+        duties = []
+        for i in range(40):
+            clock.advance(0.25)
+            c_sm = 1500.0 if i < 20 else 1000.0
+            duties.append(th.observe_now(u_sm=0.5, c_sm=c_sm))
+        return duties
+
+    a, b = trajectory(), trajectory()
+    assert a == b
+    # first observation uses dt=1.0; later ones the clock delta (0.25 s)
+    assert a[0] != pytest.approx(a[1]) or a[1] != pytest.approx(a[2])
+
+
+def test_observe_now_coalesces_bursty_samples():
+    """Near-simultaneous observations must not feed the PID an explosive
+    dt (derivative = error delta / dt): sub-millisecond samples are dropped
+    and the duty is unchanged."""
+    clock = VirtualClock()
+    th = KernelThrottle(PIDController(PIDConfig(kd=0.5)), clock=clock)
+    clock.advance(1.0)
+    th.observe_now(u_sm=0.5, c_sm=1500.0)
+    duty = th.duty
+    clock.advance(1e-7)                      # telemetry burst
+    assert th.observe_now(u_sm=0.9, c_sm=1000.0) == duty
+    assert th.duty == duty
+    clock.advance(1.0)                       # normal cadence resumes
+    th.observe_now(u_sm=0.9, c_sm=1000.0)
+    assert 0.0 <= th.duty <= 1.0 and th.duty != duty
+
+
+def test_gpu_monitor_sample_stamps_with_injected_clock():
+    clock = VirtualClock(start=100.0)
+    mon = GPUMonitor(horizon_s=10.0, clock=clock)
+    s1 = mon.sample(gpu_util=0.5, sm_activity=0.3, sm_clock=1500.0,
+                    mem_used_frac=0.4)
+    assert s1.ts == 100.0
+    clock.advance(15.0)   # beyond the horizon: first sample must be dropped
+    mon.sample(gpu_util=0.6, sm_activity=0.4, sm_clock=1400.0,
+               mem_used_frac=0.5)
+    assert [s.ts for s in mon.samples] == [115.0]
+    assert mon.latest().gpu_util == 0.6
