@@ -1,0 +1,127 @@
+"""The canonical bench-trajectory artifact: ``BENCH_sim.json``.
+
+``python -m benchmarks.run --json BENCH_sim.json`` collects each perf
+suite's structured results (fixed seeds, wall + per-phase breakdown) into
+one schema-versioned document so perf regressions become diffable across
+PRs — CI uploads the artifact and fails on wall regressions beyond a
+tolerance vs the committed baseline (``benchmarks/BENCH_baseline.json``).
+
+Walls are measured wall-clock (inherently machine-dependent); regression
+checks therefore compare *ratios* against a baseline recorded on the same
+class of runner, with generous tolerance.  Everything else in the artifact
+(counts, speedup ratios, acceptance booleans) is seed-deterministic.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+
+BENCH_SCHEMA = "repro.bench_sim/v1"
+
+# suite name -> list of required keys in its result dict
+_SUITE_KEYS = {
+    "bench_sim_scale": ("cells", "phases"),
+    "overhead_matching": ("steady_state", "km_scaling", "phases"),
+    "kernel_bench": ("cells", "phases"),
+}
+
+
+def environment() -> dict:
+    import numpy
+
+    import jax
+    return {
+        "python": sys.version.split()[0],
+        "numpy": numpy.__version__,
+        "jax": jax.__version__,
+        "platform": platform.machine(),
+    }
+
+
+def make_artifact(suites: dict, *, smoke: bool, seed: int = 0) -> dict:
+    return {
+        "schema": BENCH_SCHEMA,
+        "smoke": bool(smoke),
+        "seed": seed,
+        "env": environment(),
+        "suites": suites,
+    }
+
+
+def check_schema(doc: dict) -> list[str]:
+    """Validate a BENCH_sim.json document; returns problems (empty = ok)."""
+    problems = []
+    if doc.get("schema") != BENCH_SCHEMA:
+        problems.append(f"schema != {BENCH_SCHEMA!r}: {doc.get('schema')!r}")
+    for k in ("smoke", "seed", "env", "suites"):
+        if k not in doc:
+            problems.append(f"missing key {k!r}")
+    suites = doc.get("suites") or {}
+    for name, keys in _SUITE_KEYS.items():
+        if name not in suites:
+            problems.append(f"missing suite {name!r}")
+            continue
+        for k in keys:
+            if k not in suites[name]:
+                problems.append(f"suite {name!r} missing {k!r}")
+    ss = (suites.get("overhead_matching") or {}).get("steady_state") or {}
+    for k in ("seed_round_s", "cold_round_s", "warm_round_s", "speedup",
+              "warm_equals_cold"):
+        if k not in ss:
+            problems.append(f"steady_state missing {k!r}")
+    return problems
+
+
+def compare_walls(current: dict, baseline: dict,
+                  max_ratio: float = 1.5) -> list[str]:
+    """Wall-regression gate: every suite's headline walls must stay within
+    ``max_ratio`` × the committed baseline.  Returns violations."""
+    problems = []
+    if bool(current.get("smoke")) != bool(baseline.get("smoke")):
+        # full-mode walls vs a smoke baseline (or vice versa) would produce
+        # meaningless ratios — refuse instead of misreporting
+        return [f"mode mismatch: current smoke={current.get('smoke')} vs "
+                f"baseline smoke={baseline.get('smoke')}"]
+    cur_s, base_s = current.get("suites", {}), baseline.get("suites", {})
+    for suite, base in base_s.items():
+        cur = cur_s.get(suite)
+        if cur is None:
+            problems.append(f"suite {suite!r} missing from current run")
+            continue
+        for key, base_wall in (base.get("headline_walls") or {}).items():
+            cur_wall = (cur.get("headline_walls") or {}).get(key)
+            if cur_wall is None:
+                problems.append(f"{suite}:{key} missing from current run")
+            elif base_wall > 0 and cur_wall > base_wall * max_ratio:
+                problems.append(
+                    f"{suite}:{key} regressed: {cur_wall:.3f}s > "
+                    f"{max_ratio}x baseline {base_wall:.3f}s")
+    return problems
+
+
+def main(argv=None) -> int:
+    """``python -m benchmarks.bench_schema --check FILE [--baseline FILE]``"""
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", required=True, metavar="BENCH_sim.json")
+    ap.add_argument("--baseline", default=None,
+                    metavar="BENCH_baseline.json")
+    ap.add_argument("--max-ratio", type=float, default=1.5)
+    args = ap.parse_args(argv)
+    with open(args.check) as f:
+        doc = json.load(f)
+    problems = check_schema(doc)
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        problems += compare_walls(doc, baseline, max_ratio=args.max_ratio)
+    for p in problems:
+        print(f"BENCH: {p}", file=sys.stderr)
+    print("bench artifact " + ("FAIL" if problems else "OK"),
+          file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

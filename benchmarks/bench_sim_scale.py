@@ -40,9 +40,10 @@ def _build_predictor(tiny: bool):
 
 
 def bench_cell(policy: str, n_devices: int, predictor, *, horizon_s: float,
-               tick_s: float, trace: str, seed: int = 0) -> dict:
+               tick_s: float, trace: str, seed: int = 0,
+               engine: str = "numpy") -> dict:
     cfg = SimConfig(policy=policy, n_devices=n_devices, horizon_s=horizon_s,
-                    tick_s=tick_s, trace=trace, seed=seed)
+                    tick_s=tick_s, trace=trace, seed=seed, engine=engine)
     sim = ClusterSim(cfg,
                      predictor if resolve(policy).needs_predictor else None)
     t0 = time.perf_counter()
@@ -138,6 +139,52 @@ def run() -> None:
     predictor = _build_predictor(tiny=True)
     sweep([200, 2000], ["muxflow", "time-sharing", "online-only"],
           horizon_s=2 * 3600.0, tick_s=30.0, trace="A", predictor=predictor)
+
+
+def run_json(smoke: bool = False) -> dict:
+    """Structured engine-comparison cells for BENCH_sim.json.
+
+    Every cell runs both tick engines at the same seed and records, besides
+    the walls, whether the engines' SimResults were byte-identical — the
+    perf trajectory doubles as a cross-engine parity canary.
+    """
+    import dataclasses as _dc
+    import json as _json
+    t0 = time.perf_counter()
+    predictor = _build_predictor(tiny=smoke)
+    t_pred = time.perf_counter() - t0
+    shapes = ([(200, 1800.0)] if smoke
+              else [(2000, 4 * 3600.0), (20000, 12 * 3600.0)])
+    cells = []
+    for n, horizon_s in shapes:
+        for pol in ("muxflow", "time-sharing"):
+            reprs = {}
+            for engine in ("numpy", "xla"):
+                if smoke:
+                    # tiny CI shapes: exclude one-time jit/kernel compiles
+                    # from the recorded wall (full shapes amortize them)
+                    bench_cell(pol, n, predictor, horizon_s=horizon_s,
+                               tick_s=30.0, trace="B", engine=engine)
+                c = bench_cell(pol, n, predictor, horizon_s=horizon_s,
+                               tick_s=30.0, trace="B", engine=engine)
+                reprs[engine] = _json.dumps(_dc.asdict(c.pop("res")),
+                                            sort_keys=True)
+                cells.append({"policy": pol, "n_devices": n,
+                              "horizon_s": horizon_s, "engine": engine,
+                              **c})
+            cells[-1]["engines_byte_identical"] = (
+                reprs["numpy"] == reprs["xla"])
+    headline = {}
+    for c in cells:
+        if c["policy"] == "muxflow" and c["n_devices"] == max(
+                s[0] for s in shapes):
+            headline[f"muxflow_n{c['n_devices']}_{c['engine']}"] = \
+                c["wall_s"]
+    return {
+        "cells": cells,
+        "phases": {"predictor_train_s": t_pred},
+        "headline_walls": headline,
+    }
 
 
 if __name__ == "__main__":

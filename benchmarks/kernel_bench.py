@@ -14,6 +14,61 @@ from repro.optim.optimizer import AdamW, AdamWConfig
 from .bench_lib import emit, timeit
 
 
+def run_json(smoke: bool = False) -> dict:
+    """Structured kernel cells for BENCH_sim.json: the attention pair plus
+    one real train/decode smoke arch (all archs in full mode)."""
+    import time as _time
+    t0 = _time.perf_counter()
+    key = jax.random.PRNGKey(0)
+    B, S, H, Hk, d = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hk, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hk, d),
+                          jnp.float32)
+    flops = 4.0 * B * H * S * S * d
+    att_m = jax.jit(lambda q, k, v: L.attention(q, k, v, causal=True))
+    att_c = jax.jit(lambda q, k, v: L.attention_chunked(
+        q, k, v, causal=True, chunk_q=512, chunk_k=512))
+    cells = []
+    for name, fn in (("attn_materialized_2k", att_m),
+                     ("attn_chunked_2k", att_c)):
+        us = timeit(lambda: jax.block_until_ready(fn(q, k, v)), iters=3)
+        cells.append({"name": name, "us_per_call": us,
+                      "gflops": flops / us / 1e3})
+    t_attn = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    archs = (("xlstm-350m",) if smoke
+             else ("h2o-danube-1.8b", "deepseek-v2-lite-16b",
+                   "jamba-1.5-large-398b", "xlstm-350m"))
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        params = init_params(key, cfg)
+        opt = AdamW(AdamWConfig(total_steps=100))
+        ts = jax.jit(make_train_step(cfg, opt))
+        batch = {"tokens": jax.random.randint(key, (4, 64), 0,
+                                              cfg.vocab_size)}
+        if cfg.frontend == "audio":
+            batch["src_embeds"] = jax.random.normal(
+                key, (4, 64, cfg.d_model), cfg.dtype)
+        if cfg.frontend == "patch":
+            batch["patch_embeds"] = jax.random.normal(
+                key, (4, cfg.num_patches, cfg.d_model), cfg.dtype)
+            batch["tokens"] = batch["tokens"][:, :64 - cfg.num_patches]
+        st = opt.init(params)
+        us = timeit(lambda: jax.block_until_ready(
+            ts(params, st, batch)[2]["loss"]), iters=3)
+        cells.append({"name": f"train_step_smoke_{arch}", "us_per_call": us,
+                      "tok_per_s": 4 * 64 / (us / 1e6)})
+    t_steps = _time.perf_counter() - t0
+    return {
+        "cells": cells,
+        "phases": {"attention_s": t_attn, "train_steps_s": t_steps},
+        "headline_walls": {c["name"]: c["us_per_call"] / 1e6
+                           for c in cells if "attn" in c["name"]},
+    }
+
+
 def run() -> None:
     key = jax.random.PRNGKey(0)
     # chunked attention vs materialized (the jnp flash analogue)

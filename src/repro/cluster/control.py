@@ -120,7 +120,9 @@ class ControlPlane:
             device_repair_s=sc.device_repair_s,
             online_outage_s=sc.online_outage_s,
             memory_quota=sc.memory_quota, shard_size=sc.shard_size,
-            predictor_cache_quantum=sc.predictor_cache_quantum)
+            predictor_cache_quantum=sc.predictor_cache_quantum,
+            engine=sc.engine,
+            incremental_matching=sc.incremental_matching)
         self.sim = ClusterSim(cfg, predictor, fleet=self.fleet,
                               hooks=_HookAdapter(self),
                               external_jobs=sc.external_jobs)
@@ -200,7 +202,7 @@ class ControlPlane:
 
     def _autoscale(self, t: float) -> None:
         sim = self.sim
-        qps = sim.qps_bank.qps(t)
+        qps = sim.tick_qps(t)       # memoized: the engine reads the same row
         for si, svc in enumerate(SERVICES):
             scaler = self.scalers.get(svc)
             if scaler is None:
@@ -246,9 +248,24 @@ class ControlPlane:
                                          sorted(self.scalers.items())}}
                            if self.scalers else None),
             "pools": self.sim.pool_view(self._t_end),
+            "scheduler": self._scheduler_telemetry(),
             "events": self.bus.summary(),
         }
         return jsonify(rep)
+
+    def _scheduler_telemetry(self) -> dict:
+        """Deterministic scheduler-side counters: speed-predictor memo
+        hit/miss/eviction stats and incremental-matcher shard reuse.  Both
+        are pure functions of the (seeded) call sequence, so they are
+        byte-identical across tick engines like the rest of the report."""
+        sim = self.sim
+        pred = sim.predictor
+        return {
+            "predictor_cache": (pred.stats()
+                                if hasattr(pred, "stats") else None),
+            "matching": (sim._matcher.stats()
+                         if sim._matcher is not None else None),
+        }
 
 
 def jsonify(obj):
@@ -313,6 +330,7 @@ def run_policy_scenario(policy, predictor=None, **sim_overrides):
         shard_size=cfg.shard_size,
         predictor_cache_quantum=cfg.predictor_cache_quantum,
         pools=(), faults=None, agents=None, autoscale=False,
-        external_jobs=False)
+        external_jobs=False, engine=cfg.engine,
+        incremental_matching=cfg.incremental_matching)
     cp = ControlPlane(sc, predictor=predictor)
     return cp.run()

@@ -6,14 +6,15 @@
       --policy tally-priority
   PYTHONPATH=src python -m repro.cluster.run --scenario smoke
   PYTHONPATH=src python -m repro.cluster.run --scenario diurnal-mixed \
-      --devices 20000 --hours 12 --seed 0 --out report.json
+      --devices 20000 --hours 12 --seed 0 --engine xla --out report.json
   PYTHONPATH=src python -m repro.cluster.run --scenario fault-storm \
       --no-graceful-exit --devices 500 --hours 2
   PYTHONPATH=src python -m repro.cluster.run --check-schema report.json
 
 Reports are deterministic JSON (no wall-clock fields): the same scenario,
-devices, hours, and seed always produce byte-identical output.  Timing goes
-to stderr.
+devices, hours, and seed always produce byte-identical output — including
+across tick engines (--engine numpy and --engine xla emit the same bytes;
+CI diffs them).  Timing goes to stderr.
 """
 from __future__ import annotations
 
@@ -65,6 +66,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--policy", default=None,
                     help="sharing-policy override (see --list-policies)")
+    ap.add_argument("--engine", default=None, choices=("numpy", "xla"),
+                    help="tick-engine backend; reports are byte-identical "
+                         "across engines (numpy is the faster one on CPU "
+                         "today — see README 'Performance')")
     ap.add_argument("--tick", type=float, default=None)
     gx = ap.add_mutually_exclusive_group()
     gx.add_argument("--graceful-exit", dest="graceful", action="store_true",
@@ -106,7 +111,8 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     report = run_scenario(
         sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
-        policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful)
+        policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful,
+        engine=args.engine)
     wall = time.perf_counter() - t0
     out = json.dumps(report, indent=2, sort_keys=True)
     if args.out:

@@ -53,6 +53,14 @@ class Scenario:
     external_jobs: bool = True              # submit via the control plane
     keep_event_log: bool = False
     strict_lifecycle: bool = True
+    # the tick-engine backend is an execution detail — "numpy" and "xla"
+    # produce byte-identical reports (CI diffs them), so it stays out of
+    # to_dict().  incremental_matching is NOT neutral in that sense (the
+    # warm-started matcher's shard deal differs from the cold compact
+    # matcher's, so flipping it changes placements) and is therefore part
+    # of the scenario echo like any other semantic knob.
+    engine: str = "numpy"
+    incremental_matching: bool = True
 
     def horizon_seconds(self) -> float:
         return (self.horizon_s if self.horizon_s is not None
@@ -69,6 +77,9 @@ class Scenario:
         d = dataclasses.asdict(self)
         d["policy"] = policy_name(self.policy)
         d["pools"] = [p.to_dict() for p in self.pools]
+        # engine-invariant reports: the same campaign must produce the same
+        # bytes whichever tick engine ran it (CI diffs the two)
+        del d["engine"]
         return d
 
 

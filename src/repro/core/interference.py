@@ -62,8 +62,11 @@ def shared_performance(online: WorkloadProfile, offline: WorkloadProfile,
     # memory bandwidth contention
     bw_off = offline.mem_bw * (used_off / max(offline.sm_activity, 1e-6))
     bw_over = max(0.0, online.mem_bw * online.gpu_util + bw_off - 1.0)
+    # used_off^1.5 spelled as x*sqrt(x): sqrt is IEEE-correctly-rounded on
+    # every backend (numpy, XLA CPU), unlike libm pow — this keeps the
+    # compiled tick engine bitwise-aligned with the numpy engines
     online_slowdown = (1.0 + _MPS_OVERHEAD
-                       + _BASE_CONTENTION * used_off ** 1.5
+                       + _BASE_CONTENTION * used_off * np.sqrt(used_off)
                        + _SM_CONTENTION * overlap_inst / max(inst_on, 0.05)
                        + _BW_CONTENTION * bw_over / max(online.mem_bw, 0.05))
     # offline throughput: what it gets of its demand, minus contention losses
@@ -111,21 +114,44 @@ ONLINE_SERVICE_PROFILES = {
 }
 
 
-def online_profile_arrays(service_idx: np.ndarray, qps: np.ndarray,
+def online_profile_consts(service_idx: np.ndarray,
                           services: tuple[str, ...]) -> dict[str, np.ndarray]:
+    """Per-device service-constant gathers for :func:`online_profile_arrays`.
+
+    ``service_idx`` is fixed for a fleet's lifetime, so engines compute this
+    once instead of re-gathering five constant arrays every tick."""
+    def const(key):
+        return np.array([ONLINE_SERVICE_PROFILES[s][key] for s in services],
+                        np.float64)[service_idx]
+
+    consts = {k: const(k) for k in ("qps_capacity", "peak_sm", "mem_bw",
+                                    "base_latency_ms", "mem_bytes_frac")}
+    for arr in consts.values():
+        # these arrays are cached for a fleet's lifetime and two of them
+        # are handed out verbatim every tick (exec_time_ms,
+        # mem_bytes_frac); freeze them so a misbehaving policy mutating
+        # its inputs fails loudly instead of corrupting every later tick
+        arr.flags.writeable = False
+    return consts
+
+
+def online_profile_arrays(service_idx: np.ndarray, qps: np.ndarray,
+                          services: tuple[str, ...],
+                          consts: dict[str, np.ndarray] | None = None,
+                          ) -> dict[str, np.ndarray]:
     """Vectorized :func:`online_profile` over a fleet.
 
     ``service_idx[i]`` indexes into ``services``; returns a dict of per-device
     arrays with the same fields as :class:`WorkloadProfile`.  The arithmetic
     mirrors the scalar function operation-for-operation so values agree
-    bitwise with per-device calls.
+    bitwise with per-device calls.  Pass a precomputed ``consts`` (from
+    :func:`online_profile_consts`) to skip the per-call constant gathers on
+    hot paths — the values are identical either way.
     """
-    def const(key):
-        return np.array([ONLINE_SERVICE_PROFILES[s][key] for s in services],
-                        np.float64)[service_idx]
-
-    cap = const("qps_capacity")
-    peak = const("peak_sm")
+    if consts is None:
+        consts = online_profile_consts(service_idx, services)
+    cap = consts["qps_capacity"]
+    peak = consts["peak_sm"]
     x = qps / cap
     act = peak * (1.0 - np.exp(-1.6 * (qps / np.maximum(cap, 1e-6))))
     util = np.clip(0.08 + 0.40 * x, 0.0, 1.0)
@@ -133,9 +159,9 @@ def online_profile_arrays(service_idx: np.ndarray, qps: np.ndarray,
         "gpu_util": util,
         "sm_activity": act,
         "sm_occupancy": 0.35 + 0.3 * act,
-        "mem_bw": const("mem_bw") * util,
-        "exec_time_ms": const("base_latency_ms"),
-        "mem_bytes_frac": const("mem_bytes_frac"),
+        "mem_bw": consts["mem_bw"] * util,
+        "exec_time_ms": consts["base_latency_ms"],
+        "mem_bytes_frac": consts["mem_bytes_frac"],
     }
 
 
@@ -163,7 +189,7 @@ def shared_performance_arrays(on: dict[str, np.ndarray],
     bw_off = off["mem_bw"] * (used_off / np.maximum(off["sm_activity"], 1e-6))
     bw_over = np.maximum(0.0, on["mem_bw"] * on["gpu_util"] + bw_off - 1.0)
     online_slowdown = (1.0 + _MPS_OVERHEAD
-                       + _BASE_CONTENTION * used_off ** 1.5
+                       + _BASE_CONTENTION * used_off * np.sqrt(used_off)
                        + _SM_CONTENTION * overlap_inst / np.maximum(inst_on, 0.05)
                        + _BW_CONTENTION * bw_over / np.maximum(on["mem_bw"], 0.05))
     eff = used_off - 0.5 * overlap_avg

@@ -70,42 +70,72 @@ def mlp_apply(params, x):
     return jax.nn.sigmoid(h[..., 0])   # normalized throughput in (0,1)
 
 
+_mlp_apply_jit = jax.jit(mlp_apply)
+
+
 @dataclasses.dataclass
 class SpeedPredictor:
     """One trained MLP per GPU type (the paper trains per-type models)."""
     params_by_type: dict
 
     def predict(self, gpu_type: str, feats: np.ndarray) -> np.ndarray:
-        """feats: (..., N_FEATURES) -> (...,) normalized throughput."""
+        """feats: (..., N_FEATURES) -> (...,) normalized throughput.
+
+        Batches run through one jitted apply; rows are padded to the next
+        power of two so the scheduler's varying round sizes hit a handful
+        of compiled shapes instead of recompiling per batch size.
+        """
         params = self.params_by_type[gpu_type]
-        return np.asarray(mlp_apply(params, jnp.asarray(feats)))
+        feats = np.asarray(feats, np.float32)
+        rows = feats.reshape(-1, feats.shape[-1])
+        k = rows.shape[0]
+        if k == 0:
+            return np.zeros(feats.shape[:-1], np.float32)
+        pad = 1 << (k - 1).bit_length()
+        if pad != k:
+            rows = np.concatenate(
+                [rows, np.zeros((pad - k, rows.shape[1]), np.float32)])
+        out = np.asarray(_mlp_apply_jit(params, jnp.asarray(rows)))[:k]
+        return out.reshape(feats.shape[:-1])
 
     def predict_pair(self, gpu_type: str, online, offline, sm_off) -> float:
         return float(self.predict(gpu_type, pair_features(online, offline, sm_off)))
 
 
 class CachedSpeedPredictor:
-    """Memoizing wrapper around :class:`SpeedPredictor` for the scheduler's
-    repeated rounds.
+    """Bounded (LRU) memoizing wrapper around :class:`SpeedPredictor` for
+    the scheduler's repeated rounds.
 
     With the paper's workloads a feature row is determined by the (online
     service @ QPS, offline model, SM share) triple, and the same triples
     recur every scheduling interval.  Rows are quantized to ``quantum`` (the
     prediction is computed *on the quantized row*, so the cache is
-    self-consistent) and keyed per GPU type; misses are batched into a single
-    inner predictor call.  ``quantum`` trades a tiny prediction perturbation
-    for a cross-round hit rate that grows toward 100 % as the fleet's QPS
-    curves revisit the same buckets.
+    self-consistent) and keyed per GPU type by their bytes.
+
+    Each call deduplicates its rows **vectorized** (``np.unique`` over the
+    byte rows) before touching the Python-level cache, so a 20 000-device
+    round costs a few hundred dict operations instead of one per
+    (device × model) pair — this is what keeps weight-grid construction off
+    the interpreter at paper scale.  Misses are batched into a single inner
+    predictor call.
+
+    The memo is a true LRU bounded by ``max_entries`` (hits refresh
+    recency, overflow evicts the least-recently-used row — the unbounded
+    growth the earlier clear-on-overflow scheme traded away is gone), and
+    ``stats()`` exposes hit/miss/eviction counters for telemetry snapshots.
     """
 
     def __init__(self, inner: SpeedPredictor, quantum: float = 0.01,
                  max_entries: int = 2_000_000):
+        import collections
         self.inner = inner
         self.quantum = float(quantum)
-        self.max_entries = max_entries
-        self._cache: dict[tuple[str, bytes], float] = {}
+        self.max_entries = int(max_entries)
+        self._cache: "collections.OrderedDict[tuple[str, bytes], float]" = \
+            collections.OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     @property
     def params_by_type(self):
@@ -116,26 +146,43 @@ class CachedSpeedPredictor:
         squeeze = feats.ndim == 1
         rows = feats.reshape(-1, feats.shape[-1])
         if self.quantum > 0:
-            rows = (np.round(rows / self.quantum) * self.quantum).astype(np.float32)
-        out = np.empty(rows.shape[0], np.float32)
-        miss_idx: list[int] = []
-        keys = [(gpu_type, rows[i].tobytes()) for i in range(rows.shape[0])]
+            rows = (np.round(rows / self.quantum)
+                    * self.quantum).astype(np.float32)
+        rows = np.ascontiguousarray(rows)
+        # dedupe by row *bytes* (matches dict-key semantics: -0.0 != 0.0);
+        # a void view makes this one memcmp-argsort instead of the
+        # column-by-column lexsort np.unique(axis=0) would run
+        nbytes = rows.shape[-1] * rows.itemsize
+        voids = rows.view(np.dtype((np.void, nbytes))).reshape(-1)
+        uniq_v, inverse = np.unique(voids, return_inverse=True)
+        uniq_u8 = uniq_v.view(np.uint8).reshape(uniq_v.shape[0], nbytes)
+        uniq_rows = uniq_u8.view(np.float32)
+        cache = self._cache
+        uniq_vals = np.empty(uniq_rows.shape[0], np.float32)
+        miss_u: list[int] = []
+        keys = [(gpu_type, uniq_u8[i].tobytes())
+                for i in range(uniq_rows.shape[0])]
         for i, key in enumerate(keys):
-            val = self._cache.get(key)
+            val = cache.get(key)
             if val is None:
-                miss_idx.append(i)
+                miss_u.append(i)
             else:
-                out[i] = val
-        self.hits += rows.shape[0] - len(miss_idx)
-        self.misses += len(miss_idx)
-        if miss_idx:
-            mi = np.asarray(miss_idx)
-            pred = self.inner.predict(gpu_type, rows[mi])
-            out[mi] = pred
-            if len(self._cache) + len(mi) > self.max_entries:
-                self._cache.clear()
-            for i, p in zip(miss_idx, np.asarray(pred, np.float32)):
-                self._cache[keys[i]] = float(p)
+                cache.move_to_end(key)
+                uniq_vals[i] = val
+        n_miss = int(np.isin(inverse, miss_u).sum()) if miss_u else 0
+        self.misses += n_miss
+        self.hits += rows.shape[0] - n_miss
+        if miss_u:
+            mi = np.asarray(miss_u)
+            pred = np.asarray(self.inner.predict(gpu_type, uniq_rows[mi]),
+                              np.float32)
+            uniq_vals[mi] = pred
+            for i, p in zip(miss_u, pred):
+                cache[keys[i]] = float(p)
+            while len(cache) > self.max_entries:
+                cache.popitem(last=False)
+                self.evictions += 1
+        out = uniq_vals[inverse]
         shaped = out.reshape(feats.shape[:-1])
         return shaped[()] if squeeze else shaped
 
@@ -146,6 +193,12 @@ class CachedSpeedPredictor:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        """Deterministic counters for telemetry/report surfaces."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._cache),
+                "hit_rate": self.hit_rate()}
 
 
 def make_dataset(rng: np.random.Generator, n: int = 2000,

@@ -87,21 +87,11 @@ def build_online_slots(free_idx, gpu_type: list[str], service_idx,
         for i in free_idx]
 
 
-def build_weight_grid(slots: list[OnlineSlot], jobs: list[OfflineJob],
-                      predictor: SpeedPredictor, cfg: SchedulerConfig,
-                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Batched prediction over the (slot × unique offline profile) grid.
-
-    Returns ``(values (n, u), col_group (m,), shares (n,))`` where
-    ``values[i, col_group[j]]`` is the predicted normalized throughput of
-    pairing slot i with job j.  One predictor call per GPU type; cost is
-    O(n · u) instead of O(n · m) — with the paper's four offline models
-    u = 4 regardless of queue depth.
-    """
-    n, m = len(slots), len(jobs)
-    shares = np.array([_sm_share(cfg, s.profile) for s in slots], np.float64)
+def job_groups(jobs: list[OfflineJob]) -> tuple[np.ndarray,
+                                                list[WorkloadProfile]]:
+    """Group jobs by (identical) offline profile: (col_group (m,), uniq)."""
     group_of: dict[WorkloadProfile, int] = {}
-    col_group = np.empty(m, np.int64)
+    col_group = np.empty(len(jobs), np.int64)
     uniq: list[WorkloadProfile] = []
     for j, jb in enumerate(jobs):
         g = group_of.get(jb.profile)
@@ -109,47 +99,103 @@ def build_weight_grid(slots: list[OnlineSlot], jobs: list[OfflineJob],
             g = group_of[jb.profile] = len(uniq)
             uniq.append(jb.profile)
         col_group[j] = g
+    return col_group, uniq
+
+
+def build_weight_grid_arrays(gpu_types: list[str], on_feats: np.ndarray,
+                             shares: np.ndarray, jobs: list[OfflineJob],
+                             predictor: SpeedPredictor, cfg: SchedulerConfig,
+                             ) -> tuple[np.ndarray, np.ndarray]:
+    """Array-native batched prediction over the (slot × unique offline
+    profile) grid — the engines' hot path (no per-slot Python objects).
+
+    ``gpu_types`` is the per-slot GPU type, ``on_feats`` the (n, 4) float32
+    online feature block (util, activity, occupancy, exec seconds), and
+    ``shares`` the per-slot offline SM share.  Returns ``(values (n, u),
+    col_group (m,))``.  One predictor call per GPU type; cost is O(n · u)
+    instead of O(n · m) — with the paper's four offline models u = 4
+    regardless of queue depth.
+    """
+    n, m = len(gpu_types), len(jobs)
+    col_group, uniq = job_groups(jobs)
     u = len(uniq)
-    on_feats = np.array([[s.profile.gpu_util, s.profile.sm_activity,
-                          s.profile.sm_occupancy, s.profile.exec_time_ms / 1000.0]
-                         for s in slots], np.float32)
     off_feats = np.array([[p.gpu_util, p.sm_activity, p.sm_occupancy,
-                           p.exec_time_ms / 1000.0] for p in uniq], np.float32)
-    by_type: dict[str, list[int]] = {}
-    for i, s in enumerate(slots):
-        by_type.setdefault(s.gpu_type, []).append(i)
+                           p.exec_time_ms / 1000.0] for p in uniq],
+                         np.float32)
     values = np.zeros((n, u), np.float64)
-    for gpu_type, idxs in by_type.items():
+    shares32 = shares.astype(np.float32)
+    gpu_types_arr = np.asarray(gpu_types)
+    # distinct types in first-occurrence order, without a Python iteration
+    # over every slot
+    uniq_types, first = np.unique(gpu_types_arr, return_index=True)
+    for gpu_type in uniq_types[np.argsort(first)]:
+        idxs = np.flatnonzero(gpu_types_arr == gpu_type)
         k = len(idxs)
         feats = np.empty((k, u, N_FEATURES), np.float32)
         feats[:, :, 0:4] = on_feats[idxs][:, None, :]
         feats[:, :, 4:8] = off_feats[None, :, :]
-        feats[:, :, 8] = shares[idxs].astype(np.float32)[:, None]
+        feats[:, :, 8] = shares32[idxs][:, None]
         pred = predictor.predict(gpu_type, feats.reshape(k * u, N_FEATURES))
         values[idxs] = pred.reshape(k, u)
     values[values < cfg.min_weight] = 0.0
+    return values, col_group
+
+
+def build_weight_grid(slots: list[OnlineSlot], jobs: list[OfflineJob],
+                      predictor: SpeedPredictor, cfg: SchedulerConfig,
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slot-object wrapper over :func:`build_weight_grid_arrays` (kept for
+    the reference engine and external callers; the numerics live in the
+    array-native core, so both paths produce identical grids)."""
+    shares = np.array([_sm_share(cfg, s.profile) for s in slots], np.float64)
+    on_feats = np.array([[s.profile.gpu_util, s.profile.sm_activity,
+                          s.profile.sm_occupancy,
+                          s.profile.exec_time_ms / 1000.0]
+                         for s in slots], np.float32)
+    values, col_group = build_weight_grid_arrays(
+        [s.gpu_type for s in slots], on_feats, shares, jobs, predictor, cfg)
     return values, col_group, shares
+
+
+def solve_matching(values: np.ndarray, col_group: np.ndarray,
+                   cfg: SchedulerConfig, *, row_ids: np.ndarray | None = None,
+                   matcher=None) -> list[tuple[int, int]]:
+    """The matching step of Algorithm 1 on a compact weight grid.
+
+    Small problems solve dense exact KM; larger ones go through the
+    partitioned matcher — warm-started via ``matcher`` (an
+    :class:`repro.core.matching.IncrementalMatcher`, exact by construction)
+    when one is supplied, cold otherwise.
+    """
+    n, m = values.shape[0], col_group.shape[0]
+    if not cfg.use_matching:
+        # MuxFlow-M ablation: FIFO jobs onto arbitrary (first) free devices
+        return [(i, i) for i in range(min(n, m))
+                if values[i, col_group[i]] > 0]
+    if max(n, m) <= cfg.shard_size:
+        return km_match(values[:, col_group])           # dense exact KM
+    if matcher is not None:
+        if row_ids is None:
+            row_ids = np.arange(n)
+        return matcher.match(values, col_group, row_ids,
+                             shard_size=cfg.shard_size,
+                             row_slack=cfg.row_slack)
+    return sharded_match_compact(values, col_group,
+                                 shard_size=cfg.shard_size,
+                                 row_slack=cfg.row_slack)
 
 
 def schedule(slots: list[OnlineSlot], jobs: list[OfflineJob],
              predictor: SpeedPredictor,
-             cfg: SchedulerConfig = SchedulerConfig()) -> list[Assignment]:
+             cfg: SchedulerConfig = SchedulerConfig(),
+             matcher=None) -> list[Assignment]:
     """Algorithm 1.  Returns the chosen assignments."""
     if not slots or not jobs:
         return []
-    n, m = len(slots), len(jobs)
     values, col_group, shares = build_weight_grid(slots, jobs, predictor, cfg)
-    if cfg.use_matching:
-        if max(n, m) <= cfg.shard_size:
-            pairs = km_match(values[:, col_group])      # dense exact KM
-        else:
-            pairs = sharded_match_compact(
-                values, col_group, shard_size=cfg.shard_size,
-                row_slack=cfg.row_slack)
-    else:
-        # MuxFlow-M ablation: FIFO jobs onto arbitrary (first) free devices
-        pairs = [(i, i) for i in range(min(n, m))
-                 if values[i, col_group[i]] > 0]
+    row_ids = np.array([s.device_id for s in slots], np.int64)
+    pairs = solve_matching(values, col_group, cfg, row_ids=row_ids,
+                           matcher=matcher)
     return [Assignment(device_id=slots[i].device_id, job_id=jobs[j].job_id,
                        sm_share=float(shares[i]),
                        predicted_tput=float(values[i, col_group[j]]))

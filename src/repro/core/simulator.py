@@ -32,13 +32,16 @@ import time
 
 import numpy as np
 
-from repro.core.errors import MixedErrorHandler, error_from_uniform
+from repro.core.dynamic_sm import dynamic_sm_array, fixed_sm
+from repro.core.errors import ERROR_MIX, MixedErrorHandler
 from repro.core.interference import (OFFLINE_MODEL_PROFILES,
                                      ONLINE_SERVICE_PROFILES,
                                      memory_feasible, online_profile,
                                      online_profile_arrays)
+from repro.core.matching import IncrementalMatcher
 from repro.core.predictor import CachedSpeedPredictor, SpeedPredictor
-from repro.core.scheduler import (OfflineJob, build_online_slots, schedule)
+from repro.core.scheduler import (OfflineJob, build_weight_grid_arrays,
+                                  solve_matching)
 from repro.core.sysmonitor import VectorSysMonitor
 from repro.core.traces import (SERVICES, OfflineJobSpec, OnlineQPS, QPSBank,
                                make_trace)
@@ -51,6 +54,9 @@ _BASE_LATENCY_MS = {s: ONLINE_SERVICE_PROFILES[s]["base_latency_ms"]
                     for s in ONLINE_SERVICE_PROFILES}
 _P99_BIN_MS = 0.05
 _P99_MAX_MS = 10_000.0
+
+
+ENGINES = ("numpy", "xla")
 
 
 @dataclasses.dataclass
@@ -75,7 +81,11 @@ class SimConfig:
     memory_quota: float = 0.4
     # paper-scale knobs
     shard_size: int = 256                      # matcher partition bound
-    predictor_cache_quantum: float = 0.0       # >0: memoize quantized rows
+    predictor_cache_quantum: float = 0.02      # >0: memoize quantized rows
+    # tick-engine backend: "numpy" (reference) or "xla" (compiled tick
+    # kernel, bitwise-identical trajectories — see core/engine_xla.py)
+    engine: str = "numpy"
+    incremental_matching: bool = True          # reuse clean shards per round
 
 
 @dataclasses.dataclass
@@ -191,23 +201,31 @@ class _OfflineView(collections.abc.Mapping):
 
     Each key (``gpu_util``, ``sm_activity``, ``sm_occupancy``, ``mem_bw``,
     ``exec_time_ms``, ``mem_bytes_frac``) is gathered from the per-model
-    constant arrays on first access and memoized for the tick, so policies
-    that ignore their offline partner's profile (time-sharing, dedicated,
-    tally) cost nothing here.  A real Mapping, so policies written against
-    the documented dict-like contract (``.get``, iteration) work too.
+    constant arrays on first access and memoized, so policies that ignore
+    their offline partner's profile (time-sharing, dedicated, tally) cost
+    nothing here.  The engine hands in a cache dict that survives across
+    ticks until a placement changes ``model_idx`` (gathers are pure
+    functions of it), so steady ticks skip the gathers entirely.  A real
+    Mapping, so policies written against the documented dict-like contract
+    (``.get``, iteration) work too.
     """
 
     __slots__ = ("_arrs", "_idx", "_cache")
 
-    def __init__(self, arrs: dict[str, np.ndarray], model_idx: np.ndarray):
+    def __init__(self, arrs: dict[str, np.ndarray], model_idx: np.ndarray,
+                 cache: dict[str, np.ndarray] | None = None):
         self._arrs = arrs
         self._idx = model_idx
-        self._cache: dict[str, np.ndarray] = {}
+        self._cache: dict[str, np.ndarray] = ({} if cache is None
+                                              else cache)
 
     def __getitem__(self, key: str) -> np.ndarray:
         v = self._cache.get(key)
         if v is None:
             v = self._cache[key] = self._arrs[key][self._idx]
+            # cached across ticks (until the next placement): freeze so a
+            # policy mutating its inputs fails loudly, not silently
+            v.flags.writeable = False
         return v
 
     def __iter__(self):
@@ -296,6 +314,28 @@ class ClusterSim:
                      else make_trace(cfg.trace, n, cfg.horizon_s, cfg.seed))
         self.pending: list[OfflineJobSpec] = []
         self.err_handler = MixedErrorHandler(graceful_enabled=cfg.graceful_exit)
+        # vectorized error-kind mapping: cumulative thresholds accumulated in
+        # the exact order error_from_uniform walks them, so the mask-based
+        # kind lookup is bitwise-faithful to the scalar path
+        self._err_kinds = list(ERROR_MIX)
+        probs = [ERROR_MIX[k] for k in self._err_kinds]
+        self._err_total = sum(probs)
+        acc, thresh = 0.0, []
+        for p in probs:
+            acc += p
+            thresh.append(acc)
+        self._err_thresh = np.array(thresh, np.float64)
+        # per-kind handling-outcome tables, derived by probing the actual
+        # §4.2 policy (a scratch handler with this run's flags) — the tick
+        # cores consume only these tables, so MixedErrorHandler.handle
+        # stays the single home of the propagation/graceful semantics
+        probe = MixedErrorHandler(
+            graceful_enabled=self.err_handler.graceful_enabled,
+            detector_enabled=self.err_handler.detector_enabled)
+        handled = [probe.handle(k) for k in self._err_kinds]
+        self._err_propagates = np.array([h.propagated for h in handled])
+        self._err_graceful_ck = np.array(
+            [h.action.value == "graceful_exit" for h in handled])
         self.finished: list[tuple] = []            # (spec, jct, wall, progress)
         self.evictions = 0
         self.executions = 0
@@ -317,6 +357,23 @@ class ClusterSim:
         self._next_sched = 0.0
         self._n_injected = 0
         self._ext_mask: np.ndarray | None = None
+        # shared per-tick input caches (both engines read identical values)
+        from repro.core.interference import online_profile_consts
+        self._on_consts = online_profile_consts(self.service_idx, SERVICES)
+        self._qps_memo: tuple[float, np.ndarray] | None = None
+        self._gpu_type_arr = np.asarray(self.gpu_type)
+        self._matcher = (IncrementalMatcher(shard_size=cfg.shard_size)
+                         if cfg.incremental_matching else None)
+        # per-placement-version caches of model-indexed gathers/products
+        # (model_idx/sm_share change only in _start_job, which bumps
+        # self.executions — the version stamp)
+        self._off_cache: dict[str, np.ndarray] = {}
+        self._off_cache_ver = -1
+        # compiled tick engine (built lazily on the first xla tick)
+        if cfg.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {cfg.engine!r}; available: {ENGINES}")
+        self._xla = None
 
     @staticmethod
     def _scale_mem(profile, hbm_gb: float):
@@ -332,6 +389,32 @@ class ClusterSim:
         cfg = self.cfg
         t = 0.0
         n_ticks = int(cfg.horizon_s / cfg.tick_s)
+        if cfg.engine == "xla":
+            # compiled path: tick *blocks* run through one jitted
+            # lax.scan between scheduling rounds (sparse events are
+            # replayed from the kernel's stacked outputs)
+            i = 0
+            while i < n_ticks:
+                n_block = n_ticks - i
+                if self.policy.wants_scheduling:
+                    # run up to the next scheduling boundary (a block whose
+                    # first tick schedules extends to the boundary after
+                    # it).  The boundary is found by replaying the per-tick
+                    # engine's exact accumulated-float predicate
+                    # (t >= next_sched) — an arithmetic shortcut (ceil of a
+                    # division) lands on different ticks once tick_s is not
+                    # exactly representable, silently breaking cross-engine
+                    # byte-identity
+                    ns = (t + cfg.schedule_interval_s
+                          if t >= self._next_sched else self._next_sched)
+                    n_block = 1
+                    tj = t + cfg.tick_s
+                    while n_block < n_ticks - i and tj < ns:
+                        n_block += 1
+                        tj += cfg.tick_s
+                t = self._step_block(t, n_block)
+                i += n_block
+            return self._results(t)
         for _ in range(n_ticks):
             t = self.step(t)
         return self._results(t)
@@ -340,6 +423,11 @@ class ClusterSim:
         """Advance the engine one tick from time ``t``; returns the next tick
         time.  External drivers (the :mod:`repro.cluster` control plane) call
         this directly and interleave their own work between ticks."""
+        return self._step_block(t, 1)
+
+    def _step_block(self, t: float, n_block: int) -> float:
+        """Advance ``n_block`` ticks; scheduling may only occur at the first
+        tick of a block (callers align blocks to scheduling boundaries)."""
         cfg = self.cfg
         while (self._job_i < len(self.jobs)
                and self.jobs[self._job_i].submit_s <= t):
@@ -354,8 +442,21 @@ class ClusterSim:
                 self.hooks.on_schedule(self, t, n_free, n_before,
                                        n_before - len(self.pending), wall)
             self._next_sched = t + cfg.schedule_interval_s
-        self._tick(t)
-        return t + cfg.tick_s
+        if n_block == 1:
+            self._tick(t)
+            return t + cfg.tick_s
+        # multi-tick block: batch job arrivals tick-exactly (nothing reads
+        # the pending queue until the next scheduling boundary)
+        ts = [t]
+        for _ in range(n_block - 1):
+            ts.append(ts[-1] + cfg.tick_s)
+        for tj in ts[1:]:
+            while (self._job_i < len(self.jobs)
+                   and self.jobs[self._job_i].submit_s <= tj):
+                self.pending.append(self.jobs[self._job_i])
+                self._job_i += 1
+        self._tick_block(ts)
+        return ts[-1] + cfg.tick_s
 
     # ------------------------------------------------- control-plane surface
     def inject_jobs(self, specs: list[OfflineJobSpec]) -> None:
@@ -436,8 +537,9 @@ class ClusterSim:
             free = np.flatnonzero(ok)
             take = free[:len(self.pending)]
             if take.size:
-                qps = self.qps_bank.qps(t)
-                on = online_profile_arrays(self.service_idx, qps, SERVICES)
+                qps = self.tick_qps(t)
+                on = online_profile_arrays(self.service_idx, qps, SERVICES,
+                                           consts=self._on_consts)
                 shares = self.policy.sm_shares(on, take)
                 for k, i in enumerate(take):
                     self._start_job(int(i), self.pending.pop(0),
@@ -452,25 +554,41 @@ class ClusterSim:
         free = np.flatnonzero(ok)
         if free.size == 0:
             return 0, n_before
-        qps = self.qps_bank.qps(t)
-        on = online_profile_arrays(self.service_idx, qps, SERVICES)
-        slots = build_online_slots(free, self.gpu_type, self.service_idx,
-                                   on, SERVICES)
+        qps = self.tick_qps(t)
+        on = online_profile_arrays(self.service_idx, qps, SERVICES,
+                                   consts=self._on_consts)
         jobs = [OfflineJob(sp.job_id, OFFLINE_MODEL_PROFILES[sp.model],
                            sp.duration_s) for sp in self.pending]
-        assignments = schedule(slots, jobs, self.predictor, sched_cfg)
+        # array-native Algorithm 1: weight grid without per-slot objects,
+        # matching warm-started from the previous round's clean shards
+        if sched_cfg.use_dynamic_sm:
+            shares = dynamic_sm_array(on["sm_activity"][free])
+        else:
+            shares = np.full(free.size, fixed_sm(sched_cfg.fixed_sm_share),
+                             np.float64)
+        on_feats = np.stack(
+            [on["gpu_util"][free], on["sm_activity"][free],
+             on["sm_occupancy"][free], on["exec_time_ms"][free] / 1000.0],
+            axis=1).astype(np.float32)
+        values, col_group = build_weight_grid_arrays(
+            self._gpu_type_arr[free], on_feats, shares, jobs,
+            self.predictor, sched_cfg)
+        pairs = solve_matching(values, col_group, sched_cfg, row_ids=free,
+                               matcher=self._matcher)
         by_job = {sp.job_id: sp for sp in self.pending}
         assigned: set[int] = set()
-        for a in assignments:
-            spec = by_job.get(a.job_id)
-            if spec is None or a.job_id in assigned:
+        for i, j in pairs:
+            device_id = int(free[i])
+            job_id = jobs[j].job_id
+            spec = by_job.get(job_id)
+            if spec is None or job_id in assigned:
                 continue
-            if not self.feasible[self.pool_of[a.device_id],
-                                 self.service_idx[a.device_id],
+            if not self.feasible[self.pool_of[device_id],
+                                 self.service_idx[device_id],
                                  self.model_of[spec.model]]:
                 continue  # xCUDA memory quota rejects the pairing
-            assigned.add(a.job_id)
-            self._start_job(a.device_id, spec, a.sm_share, t)
+            assigned.add(job_id)
+            self._start_job(device_id, spec, float(shares[i]), t)
         if assigned:
             self.pending = [sp for sp in self.pending
                             if sp.job_id not in assigned]
@@ -493,88 +611,202 @@ class ClusterSim:
             self.hooks.on_job_start(self, t, i, spec, share)
 
     # ----------------------------------------------------------------- tick
-    def _tick(self, t: float) -> None:
+    def tick_qps(self, t: float) -> np.ndarray:
+        """Fleet QPS at tick time ``t``, memoized — the tick engine, the
+        scheduler, and the control plane's autoscaler all read one row."""
+        memo = self._qps_memo
+        if memo is not None and memo[0] == t:
+            return memo[1]
+        row = self.qps_bank.qps(t)
+        self._qps_memo = (t, row)
+        return row
+
+    def _tick_inputs(self, t: float) -> dict:
+        """The tick's dense inputs: one (3, n) uniform block (the shared RNG
+        contract with the reference engine: rows are hw-failure, error,
+        error-kind), the trace/profile arrays, and the policy's vectorized
+        shared-performance surfaces.  Both tick cores consume these verbatim,
+        so their inputs are bitwise-identical by construction."""
+        s = self.state
+        fail_u, err_u, kind_u = self.rng.random((3, self.cfg.n_devices))
+        qps = self.tick_qps(t)
+        on = online_profile_arrays(self.service_idx, qps, SERVICES,
+                                   consts=self._on_consts)
+        # gathers/products below are pure functions of (model_idx, sm_share)
+        # which only _start_job changes (version-stamped by `executions`) —
+        # steady ticks reuse them outright
+        if self._off_cache_ver != self.executions:
+            self._off_cache = {}
+            self._off_cache_ver = self.executions
+        off = _OfflineView(self.off_arrs, s.model_idx, cache=self._off_cache)
+        slow_raw, tput_raw = self.policy.shared_performance(on, off,
+                                                           s.sm_share)
+        tput_speed = tput_raw * self.speed
+        prods = self._off_cache.get("_products")
+        if prods is None:
+            # telemetry products precomputed host-side: the compiled tick
+            # core may contain no multiply that feeds an add/sub (LLVM
+            # would be free to contract it into an FMA, breaking bitwise
+            # engine parity), so every such product is formed here and
+            # only *added* in the cores
+            used_min = np.minimum(s.sm_share, off["sm_activity"])
+            prods = (used_min, 0.62 * used_min, 0.45 * used_min,
+                     off["mem_bytes_frac"])
+            for arr in prods[:3]:
+                arr.flags.writeable = False      # cached across ticks
+            self._off_cache["_products"] = prods
+        used_min, used62, used45, off_mem = prods
+        return dict(t=t, qps=qps, on=on, fail_u=fail_u, err_u=err_u,
+                    kind_u=kind_u, slow_raw=slow_raw, tput_speed=tput_speed,
+                    tput_dt=tput_speed * self.cfg.tick_s,
+                    used_min=used_min, used62=used62, used45=used45,
+                    off_mem=off_mem)
+
+    def _dense_core_numpy(self, inp: dict) -> dict:
+        """One tick of dense per-device state evolution — the reference
+        implementation of the tick core.  ``core/engine_xla.py`` compiles the
+        exact same operations; a fixed-seed test pins the two cores to
+        bitwise-identical outputs.  Mutates fleet/monitor state and returns
+        the per-tick arrays the (engine-agnostic) accounting pass consumes.
+        """
         cfg = self.cfg
         s = self.state
-        n = cfg.n_devices
+        t = inp["t"]
         dt = cfg.tick_s
-        # one (3, n) uniform block per tick — the shared RNG contract with
-        # the reference engine: rows are (hw failure, error, error kind)
-        fail_u, err_u, kind_u = self.rng.random((3, n))
-        requeues: list[tuple[int, OfflineJobSpec]] = []
+        on = inp["on"]
         alive = s.failed_until <= t
-        new_fail = alive & (fail_u < dt / (cfg.device_mtbf_h * 3600.0))
-        for i in np.flatnonzero(new_fail):
-            s.failed_until[i] = t + cfg.device_repair_s
-            if self.hooks is not None:
-                self.hooks.on_device_fail(self, t, int(i),
-                                          float(s.failed_until[i]))
-            self._evict(int(i), t, requeues, reason="device_failure",
-                        count=False)
+        new_fail = alive & (inp["fail_u"] < dt / (cfg.device_mtbf_h * 3600.0))
+        s.failed_until = np.where(new_fail, t + cfg.device_repair_s,
+                                  s.failed_until)
         act = alive & ~new_fail
-        qps = self.qps_bank.qps(t)
-        on = online_profile_arrays(self.service_idx, qps, SERVICES)
         busy = act & s.has_job
-        off = _OfflineView(self.off_arrs, s.model_idx)
-        slowdown, tput = self.policy.shared_performance(on, off, s.sm_share)
-        tput = tput * self.speed
-        slowdown = np.where(busy, slowdown, 1.0)
-        tput = np.where(busy, tput, 0.0)
+        has_job = s.has_job & ~new_fail
+        slowdown = np.where(busy, inp["slow_raw"], 1.0)
+        tput = np.where(busy, inp["tput_speed"], 0.0)
         # offline progress + periodic checkpoint
-        s.progress[busy] += tput[busy] * dt
-        s.wall[busy] += dt
+        s.progress = np.where(busy, s.progress + inp["tput_dt"], s.progress)
+        s.wall = np.where(busy, s.wall + dt, s.wall)
         ck = busy & (s.progress - s.checkpoint >= cfg.checkpoint_interval_s)
-        s.checkpoint[ck] = s.progress[ck]
-        tput_n = int(busy.sum())
-        tput_sum = float(tput[busy].sum())
-        # error injection (offline container errors)
+        s.checkpoint = np.where(ck, s.progress, s.checkpoint)
+        # error injection (offline container errors): kind + handling
+        # outcome are pure functions of the uniforms — outcome via the
+        # per-kind tables probed from MixedErrorHandler (see __init__)
         p_err = cfg.error_rate_per_job_hour * dt / 3600.0
-        for i in np.flatnonzero(busy & (err_u < p_err)):
-            self._inject_error(int(i), t, float(kind_u[i]), requeues)
+        err = busy & (inp["err_u"] < p_err)
+        # kind_idx is only meaningful where err is set (the xla core
+        # computes the full array; the contract is mask-scoped)
+        kind_idx = np.zeros(cfg.n_devices, np.int64)
+        ei = np.flatnonzero(err)
+        if ei.size:
+            r = inp["kind_u"][ei] * self._err_total
+            kind_idx[ei] = np.minimum(
+                (r[:, None] > self._err_thresh[None, :]).sum(axis=1),
+                len(self._err_kinds) - 1)
+        propagated = err & self._err_propagates[kind_idx]
+        s.outage_until = np.where(propagated, t + cfg.online_outage_s,
+                                  s.outage_until)
+        # graceful exit checkpoints before releasing
+        s.checkpoint = np.where(err & self._err_graceful_ck[kind_idx],
+                                s.progress, s.checkpoint)
+        has_job = has_job & ~err
         # job completion (error-evicted devices dropped has_job already)
-        for i in np.flatnonzero(busy & s.has_job & (s.progress >= s.duration)):
-            spec = self.job_spec[i]
-            self.finished.append((spec, t - spec.submit_s,
-                                  float(s.wall[i]), float(s.progress[i])))
-            s.has_job[i] = False
-            self.job_spec[i] = None
-            if self.hooks is not None:
-                self.hooks.on_job_finish(self, t, int(i), spec,
-                                         t - spec.submit_s, float(s.wall[i]),
-                                         float(s.progress[i]))
-        # telemetry + SysMonitor
-        used_off = np.where(
-            s.has_job,
-            np.minimum(s.sm_share, self.off_arrs["sm_activity"][s.model_idx]),
-            0.0)
-        tele_util = np.minimum(1.0, on["gpu_util"] + 0.62 * used_off)
-        tele_sm = np.minimum(1.0, on["sm_activity"] + used_off * 0.45)
-        tele_clock = 1590.0 - 420.0 * np.maximum(
-            0.0, on["sm_activity"] + used_off - 0.8)
+        fin = busy & has_job & (s.progress >= s.duration)
+        has_job = has_job & ~fin
+        # telemetry + SysMonitor.  Each expression is written so no product
+        # directly feeds an add/sub (see _tick_inputs): ``c·used_off`` terms
+        # use the host-precomputed products masked by has_job (bitwise equal
+        # to scaling after masking, since c·0 == 0), and the clock scales
+        # inside the max (bitwise equal: 420·max(0, z) == max(0, 420·z))
+        used_off = np.where(has_job, inp["used_min"], 0.0)
+        tele_util = np.minimum(
+            1.0, on["gpu_util"] + np.where(has_job, inp["used62"], 0.0))
+        tele_sm = np.minimum(
+            1.0, on["sm_activity"] + np.where(has_job, inp["used45"], 0.0))
+        tele_clock = 1590.0 - np.maximum(
+            0.0, 420.0 * (on["sm_activity"] + used_off - 0.8))
         tele_mem = np.minimum(
-            1.0, on["mem_bytes_frac"]
-            + np.where(s.has_job, self.off_arrs["mem_bytes_frac"][s.model_idx],
-                       0.0))
+            1.0, on["mem_bytes_frac"] + np.where(has_job, inp["off_mem"],
+                                                 0.0))
         level = self.monitor.classify(tele_util, tele_sm, tele_mem,
                                       tele_clock, 60.0)
         evict_ev = self.monitor.update(level, t, active=act)
-        for i in np.flatnonzero(evict_ev & s.has_job):
-            self._evict(int(i), t, requeues, reason="overlimit", count=True)
+        evict_cand = evict_ev & has_job
+        s.has_job = has_job & ~evict_cand
+        return dict(new_fail=new_fail, err=err, kind_idx=kind_idx, fin=fin,
+                    evict_cand=evict_cand, busy=busy, act=act,
+                    slowdown=slowdown, tput=tput, tele_util=tele_util,
+                    tele_sm=tele_sm, tele_clock=tele_clock, tele_mem=tele_mem,
+                    level=level, progress=s.progress, wall=s.wall,
+                    checkpoint=s.checkpoint, outage_until=s.outage_until)
+
+    def _account(self, inp: dict, core: dict) -> None:
+        """The engine-agnostic tick epilogue: sparse event bookkeeping
+        (hooks, requeues, counters) and every reduction that lands in
+        :class:`SimResults`.  Runs in numpy for both engines, on core output
+        arrays that are bitwise-identical between them — so results and
+        event streams cannot drift across engines."""
+        cfg = self.cfg
+        t = inp["t"]
+        n = cfg.n_devices
+        progress, wall = core["progress"], core["wall"]
+        checkpoint = core["checkpoint"]
+        requeues: list[tuple[int, OfflineJobSpec]] = []
+        for i in np.flatnonzero(core["new_fail"]):
+            i = int(i)
+            if self.hooks is not None:
+                self.hooks.on_device_fail(self, t, i,
+                                          t + cfg.device_repair_s)
+            self._record_evict(i, t, requeues, reason="device_failure",
+                               count=False, progress=float(progress[i]),
+                               checkpoint=float(checkpoint[i]))
+        for i in np.flatnonzero(core["err"]):
+            i = int(i)
+            kind = self._err_kinds[int(core["kind_idx"][i])]
+            self.errors_injected += 1
+            handled = self.err_handler.handle(kind)
+            if handled.propagated:
+                self.online_incidents += 1
+            if self.hooks is not None:
+                self.hooks.on_error(self, t, i, handled)
+            self._record_evict(i, t, requeues, reason="error", count=False,
+                               progress=float(progress[i]),
+                               checkpoint=float(checkpoint[i]))
+        for i in np.flatnonzero(core["fin"]):
+            i = int(i)
+            spec = self.job_spec[i]
+            self.finished.append((spec, t - spec.submit_s,
+                                  float(wall[i]), float(progress[i])))
+            self.job_spec[i] = None
+            if self.hooks is not None:
+                self.hooks.on_job_finish(self, t, i, spec,
+                                         t - spec.submit_s, float(wall[i]),
+                                         float(progress[i]))
+        for i in np.flatnonzero(core["evict_cand"]):
+            i = int(i)
+            self._record_evict(i, t, requeues, reason="overlimit",
+                               count=True, progress=float(progress[i]),
+                               checkpoint=float(checkpoint[i]))
         # requeues resume from checkpoint, at the head of the queue in the
         # reference engine's order (reverse device order)
         if requeues:
             requeues.sort(key=lambda e: e[0])
             self.pending[:0] = [spec for _, spec in reversed(requeues)]
         # online latency accounting (weighted by qps)
-        outage = s.outage_until > t
+        act, busy = core["act"], core["busy"]
+        slowdown, tput = core["slowdown"], core["tput"]
+        tput_n = int(busy.sum())
+        tput_sum = float(tput[busy].sum())
+        outage = core["outage_until"] > t
         lat = self.base_latency * slowdown * np.where(outage, 10.0, 1.0)
-        lat_a, qps_a = lat[act], qps[act]
+        lat_a, qps_a = lat[act], inp["qps"][act]
         self._lat_sum += float((lat_a * qps_a).sum())
         self._base_lat_sum += float((self.base_latency[act] * qps_a).sum())
         self._lat_wsum += float(qps_a.sum())
         np.add.at(self._lat_hist,
                   np.minimum((lat_a / _P99_BIN_MS).astype(np.int64),
                              self._lat_hist.size - 1), 1)
+        tele_util, tele_sm = core["tele_util"], core["tele_sm"]
+        tele_mem = core["tele_mem"]
         util = np.array([tele_util[act].sum(), tele_sm[act].sum(),
                          tele_mem[act].sum()])
         self._util_acc += util
@@ -584,8 +816,9 @@ class ClusterSim:
             self._tput_ticks += 1
         if self.hooks is not None:
             self.hooks.on_tick_end(self, t, {
-                "qps": qps, "gpu_util": tele_util, "sm_activity": tele_sm,
-                "mem_used": tele_mem, "sm_clock": tele_clock, "level": level,
+                "qps": inp["qps"], "gpu_util": tele_util,
+                "sm_activity": tele_sm, "mem_used": tele_mem,
+                "sm_clock": core["tele_clock"], "level": core["level"],
                 "busy": busy, "active": act, "slowdown": slowdown,
                 "tput": tput})
         if int(t) % 600 == 0:
@@ -599,14 +832,41 @@ class ClusterSim:
             self._timeline["tput"].append(
                 tput_sum / max(tput_n, 1) if tput_n else 0.0)
 
-    def _inject_error(self, i: int, t: float, kind_u: float,
-                      requeues: list) -> None:
-        self._handle_error(i, t, error_from_uniform(kind_u), requeues)
+    def _tick(self, t: float) -> None:
+        inp = self._tick_inputs(t)
+        if self.cfg.engine == "xla":
+            core = self._xla_engine().tick(inp)
+        else:
+            core = self._dense_core_numpy(inp)
+        self._account(inp, core)
+
+    def _tick_block(self, ts: list[float]) -> None:
+        """A scheduling-free run of consecutive ticks.  The xla engine scans
+        the whole block through one compiled kernel call and the accounting
+        pass replays each tick from the stacked outputs; the numpy engine
+        simply ticks."""
+        if self.cfg.engine != "xla":
+            for t in ts:
+                self._tick(t)
+            return
+        inps = [self._tick_inputs(t) for t in ts]
+        for inp, core in zip(inps, self._xla_engine().tick_block(inps)):
+            self._account(inp, core)
+
+    def _xla_engine(self):
+        if self._xla is None:
+            from repro.core.engine_xla import XlaTickEngine
+            self._xla = XlaTickEngine(self)
+        return self._xla
 
     def _handle_error(self, i: int, t: float, kind, requeues: list):
-        """One offline-container error on device ``i`` — the single path
-        shared by the engine's own error process and ``force_error``, so
-        injected/propagated accounting can never drift between them."""
+        """One offline-container error on device ``i`` — the *between-tick*
+        path (``force_error``/fault campaigns).  In-tick errors evolve
+        state inside the dense cores via the per-kind outcome tables
+        probed from :class:`MixedErrorHandler` in ``__init__`` (handler
+        semantics have one home) and book-keep through the same
+        ``err_handler.handle`` call in ``_account``, so the two paths'
+        injected/propagated accounting cannot drift."""
         self.errors_injected += 1
         handled = self.err_handler.handle(kind)
         if handled.propagated:
@@ -622,15 +882,26 @@ class ClusterSim:
 
     def _evict(self, i: int, t: float, requeues: list, *,
                reason: str = "overlimit", count: bool = True) -> None:
+        """Mutating eviction — the between-tick path (autoscaler, fault
+        campaigns, external callers).  In-tick evictions clear state inside
+        the dense core and only book-keep via :meth:`_record_evict`."""
         s = self.state
         if not s.has_job[i]:
             return
+        s.has_job[i] = False
+        self._record_evict(i, t, requeues, reason=reason, count=count,
+                           progress=float(s.progress[i]),
+                           checkpoint=float(s.checkpoint[i]))
+
+    def _record_evict(self, i: int, t: float, requeues: list, *,
+                      reason: str, count: bool, progress: float,
+                      checkpoint: float) -> None:
+        """Eviction bookkeeping: counters, requeue from checkpoint, hook."""
+        spec = self.job_spec[i]
+        if spec is None:
+            return
         if count:
             self.evictions += 1
-        spec = self.job_spec[i]
-        progress = float(s.progress[i])
-        checkpoint = float(s.checkpoint[i])
-        s.has_job[i] = False
         self.job_spec[i] = None
         requeued = progress < spec.duration_s
         if requeued:

@@ -79,9 +79,15 @@ class LegacyClusterSim:
         self._pol_name = pol.name
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
-        self.predictor = predictor
         if pol.needs_predictor and predictor is None:
             raise ValueError(f"policy {pol.name!r} needs a speed predictor")
+        if predictor is not None and cfg.predictor_cache_quantum > 0:
+            # mirror the vectorized engine's memoization so both engines
+            # schedule on identical (quantized) predictions
+            from repro.core.predictor import CachedSpeedPredictor
+            predictor = CachedSpeedPredictor(
+                predictor, quantum=cfg.predictor_cache_quantum)
+        self.predictor = predictor
         self.qps_bank = QPSBank([OnlineQPS(self.rng)
                                  for _ in range(cfg.n_devices)])
         self.devices = [

@@ -213,9 +213,7 @@ class VectorSysMonitor:
         if ei.size:
             state[ei] = S_OVERLIMIT
             self._readmit_at[ei] = np.nan
-            ring = self._ol_times.shape[1]
-            self._ol_times[ei, self._ol_ptr[ei] % ring] = now
-            self._ol_ptr[ei] += 1
+            self.push_overlimit(ei, now)
         # Overlimit: wait out the exponential re-admission period
         exit_lvl = over_m & (level != 2)
         had_wait = ~np.isnan(self._readmit_at)
@@ -224,15 +222,30 @@ class VectorSysMonitor:
         self._readmit_at[over_m & (level == 2)] = np.nan
         si = np.flatnonzero(start_wait)
         if si.size:
-            w = now - self.cfg.overlimit_window_s
-            n_entries = (self._ol_times[si] >= w).sum(axis=1)
-            period = np.minimum(
-                self.cfg.readmit_base_s * 2.0 ** np.maximum(n_entries - 1, 0),
-                self.cfg.readmit_cap_s)
-            self._readmit_at[si] = now + period
+            self._readmit_at[si] = now + self.wait_periods(si, now)
         state[readmit] = S_UNHEALTHY
         self._readmit_at[readmit] = np.nan
         return evict
+
+    # -- ring-buffer primitives (shared with the compiled tick engine,
+    #    which keeps the Overlimit ring host-side and sparse) -------------
+    def push_overlimit(self, ei: np.ndarray, now: float) -> None:
+        """Record Overlimit entries for devices ``ei`` at time ``now``."""
+        ring = self._ol_times.shape[1]
+        self._ol_times[ei, self._ol_ptr[ei] % ring] = now
+        self._ol_ptr[ei] += 1
+
+    def wait_periods(self, si: np.ndarray, now: float) -> np.ndarray:
+        """Exponential re-admission periods for devices ``si`` entering the
+        wait at ``now`` (doubling per Overlimit entry in the window).  2**k
+        is an integer shift (exact; capping the exponent at 52 cannot
+        change the min with the cap)."""
+        w = now - self.cfg.overlimit_window_s
+        n_entries = (self._ol_times[si] >= w).sum(axis=1)
+        e = np.minimum(np.maximum(n_entries - 1, 0), 52)
+        return np.minimum(
+            self.cfg.readmit_base_s * (np.int64(1) << e).astype(np.float64),
+            self.cfg.readmit_cap_s)
 
     def disable(self, idx) -> None:
         self.state[idx] = S_DISABLED

@@ -3,8 +3,8 @@ seeded, role-tagged :class:`Workload` records the pair-profiling harness can
 run.
 
 This module is the single metrics-sampling path (it absorbed the seed's
-53-line ``core/profiler.py``; a deprecation shim keeps the old imports
-working).  A profile has two sources of truth, kept deliberately separate:
+53-line ``core/profiler.py``, whose deprecation shim has since been
+removed).  A profile has two sources of truth, kept deliberately separate:
 
   * **Execution** — :func:`execute` really runs the step function (Pallas
     kernels in interpret mode on CPU, compiled on TPU) and records an output
@@ -265,8 +265,7 @@ def catalog_by_role(catalog: dict[str, Workload] | None = None,
 
 
 # ---------------------------------------------------------------------------
-# Seed-era profiler API (kept as the compatibility surface for the
-# repro.core.profiler deprecation shim)
+# Seed-era profiler API (the profiler's home since it left core/profiler.py)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass

@@ -1,0 +1,274 @@
+"""Cross-engine parity: the compiled (XLA) tick engine must be
+byte-identical to the numpy engine — state trajectories, SimResults, and
+whole scenario reports — plus unit coverage for the pieces that make that
+possible (block evaluation of the QPS bank, the LRU predictor memo, the
+incremental matcher's warm==cold exactness)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.predictor import build_speed_predictor
+from repro.core.simulator import ClusterSim, SimConfig
+
+pytestmark = pytest.mark.slow  # compiled-engine suite: jit compiles inside
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    # A100 included: the hetero-pool scenarios schedule onto it
+    return build_speed_predictor(gpu_types=("T4", "A10", "A100"), n=150,
+                                 epochs=5)
+
+
+def _lockstep(cfg_kw, predictor, n_ticks):
+    from repro.policies import resolve
+    p = (predictor
+         if resolve(cfg_kw.get("policy", "muxflow")).needs_predictor
+         else None)
+    a = ClusterSim(SimConfig(engine="numpy", **cfg_kw), p)
+    b = ClusterSim(SimConfig(engine="xla", **cfg_kw), p)
+    ta = tb = 0.0
+    for k in range(n_ticks):
+        ta = a.step(ta)
+        tb = b.step(tb)
+        sa, sb = a.state, b.state
+        for f in ("has_job", "model_idx", "sm_share", "progress",
+                  "checkpoint", "wall", "duration", "failed_until",
+                  "outage_until"):
+            assert np.array_equal(getattr(sa, f), getattr(sb, f)), (k, f)
+        assert np.array_equal(a.monitor.state, b.monitor.state), k
+        assert np.array_equal(a.monitor._readmit_at, b.monitor._readmit_at,
+                              equal_nan=True), k
+        assert np.array_equal(a.monitor._ol_times, b.monitor._ol_times), k
+        assert np.array_equal(a.monitor._ol_ptr, b.monitor._ol_ptr), k
+        assert [sp.job_id for sp in a.pending] == \
+               [sp.job_id for sp in b.pending], k
+    return a, b
+
+
+def test_lockstep_state_bitwise_under_heavy_faults(predictor):
+    """Every tick's full state must match bit-for-bit, through failure,
+    error, completion, requeue, and monitor-eviction paths."""
+    a, b = _lockstep(
+        dict(policy="muxflow", n_devices=60, horizon_s=2 * 3600.0,
+             trace="D", seed=11, device_mtbf_h=2.0, device_repair_s=300.0,
+             error_rate_per_job_hour=1.0, graceful_exit=False),
+        predictor, n_ticks=240)
+    assert a.errors_injected > 0
+    assert dataclasses.asdict(a.finalize(240 * 30.0)) == \
+        dataclasses.asdict(b.finalize(240 * 30.0))
+
+
+@pytest.mark.parametrize("policy", ["muxflow", "time-sharing",
+                                    "pb-time-sharing", "tally-priority",
+                                    "static-partition", "online-only"])
+def test_simresults_byte_identical_per_policy(policy, predictor):
+    kw = dict(policy=policy, n_devices=48, horizon_s=3 * 3600.0,
+              trace="C", seed=4)
+    from repro.policies import resolve
+    p = predictor if resolve(policy).needs_predictor else None
+    r_np = ClusterSim(SimConfig(engine="numpy", **kw), p).run()
+    r_x = ClusterSim(SimConfig(engine="xla", **kw), p).run()
+    assert dataclasses.asdict(r_np) == dataclasses.asdict(r_x)
+
+
+def test_scenario_reports_byte_identical_matrix(predictor):
+    """Acceptance: every registered scenario's JSON report is byte-for-byte
+    identical across engines at the same seed (small shapes; the
+    ``calibrated`` scenario runs with its measured provider against a saved
+    smoke matrix via the process-wide default)."""
+    from repro.cluster.control import run_scenario
+    from repro.cluster.scenario import SCENARIOS
+    for name in sorted(SCENARIOS):
+        reps = {}
+        for engine in ("numpy", "xla"):
+            reps[engine] = json.dumps(
+                run_scenario(name, predictor=predictor, n_devices=32,
+                             hours=0.5, seed=0, engine=engine),
+                sort_keys=True)
+        assert reps["numpy"] == reps["xla"], name
+
+
+def test_block_and_per_tick_modes_agree(predictor):
+    """ClusterSim.run() (lax.scan tick blocks) and externally driven
+    step() loops (T=1 kernels) must produce identical results."""
+    kw = dict(policy="muxflow", n_devices=48, horizon_s=2 * 3600.0,
+              trace="B", seed=2, engine="xla")
+    r_blocks = ClusterSim(SimConfig(**kw), predictor).run()
+    sim = ClusterSim(SimConfig(**kw), predictor)
+    t = 0.0
+    for _ in range(int(kw["horizon_s"] / 30.0)):
+        t = sim.step(t)
+    r_steps = sim.finalize(t)
+    assert dataclasses.asdict(r_blocks) == dataclasses.asdict(r_steps)
+
+
+def test_engines_agree_with_inexact_tick(predictor):
+    """tick_s values that are not exactly representable (0.7) accumulate
+    float drift in the per-tick time sequence; the xla run() block
+    boundaries must replay the numpy engine's accumulated-float scheduling
+    predicate, not an arithmetic shortcut, to stay byte-identical."""
+    kw = dict(policy="muxflow", n_devices=32, horizon_s=280.0, tick_s=0.7,
+              schedule_interval_s=2.1, trace="C", seed=1)
+    r_np = ClusterSim(SimConfig(engine="numpy", **kw), predictor).run()
+    r_x = ClusterSim(SimConfig(engine="xla", **kw), predictor).run()
+    assert dataclasses.asdict(r_np) == dataclasses.asdict(r_x)
+
+
+def test_engine_name_validation():
+    with pytest.raises(ValueError, match="unknown engine"):
+        ClusterSim(SimConfig(policy="time-sharing", engine="cuda"))
+
+
+# ------------------------------------------------------------------ pieces
+def test_qps_block_rows_bitwise_equal_per_tick():
+    from repro.core.traces import OnlineQPS, QPSBank
+    rng = np.random.default_rng(5)
+    bank = QPSBank([OnlineQPS(rng) for _ in range(128)])
+    ts = 13.5 + np.arange(48) * 30.0
+    blk = bank.qps_block(ts)
+    for j in (0, 7, 31, 47):
+        row = bank.qps(float(ts[j]))
+        assert np.array_equal(row.view(np.uint64), blk[j].view(np.uint64))
+
+
+def test_error_kind_thresholds_match_scalar_mapping():
+    """The engines' vectorized uniform→kind mapping must agree with
+    errors.error_from_uniform everywhere, including the thresholds."""
+    from repro.core.errors import error_from_uniform
+    sim = ClusterSim(SimConfig(policy="time-sharing", n_devices=4,
+                               horizon_s=60.0))
+    us = np.concatenate([np.linspace(0.0, 0.999999, 5001),
+                         sim._err_thresh - 1e-12, sim._err_thresh[:-1]])
+    us = np.clip(us, 0.0, 1.0 - 1e-15)
+    r = us * sim._err_total
+    vec = np.minimum((r[:, None] > sim._err_thresh[None, :]).sum(axis=1),
+                     len(sim._err_kinds) - 1)
+    for u, k in zip(us, vec):
+        assert sim._err_kinds[int(k)] is error_from_uniform(float(u)), u
+
+
+def test_engine_x64_is_scoped(predictor):
+    """The xla engine's float64 kernels must not leak jax's x64 mode into
+    the rest of the process: the (float32) speed predictor predicts
+    bitwise-identically before and after engine runs, and the global flag
+    stays off — otherwise unrelated float32 code (models, serving) would
+    silently change behavior whenever the engine ran."""
+    import jax
+    feats = np.random.default_rng(0).uniform(0, 1, (37, 9)).astype(
+        np.float32)
+    before = predictor.predict("T4", feats).tobytes()
+    ClusterSim(SimConfig(policy="time-sharing", n_devices=16,
+                         horizon_s=600.0, engine="xla")).run()
+    assert not jax.config.jax_enable_x64
+    assert predictor.predict("T4", feats).tobytes() == before
+
+
+# --------------------------------------------------------------- matcher
+def _scheduler_instance(rng, n, m, u=4):
+    vals = np.round(rng.uniform(0, 1, (n, u)), 2)
+    grp = rng.integers(0, u, m)
+    ids = np.sort(rng.choice(10 * n, size=n, replace=False))
+    return vals, grp, ids
+
+
+def test_incremental_matcher_warm_equals_cold():
+    from repro.core.matching import IncrementalMatcher
+    rng = np.random.default_rng(0)
+    warm = IncrementalMatcher(shard_size=128)
+    vals, grp, ids = _scheduler_instance(rng, 1500, 600)
+    for rnd in range(6):
+        # drift a few rows and churn the columns a little each round
+        touch = rng.random(vals.shape[0]) < 0.02
+        vals[touch] = np.round(rng.uniform(0, 1, (int(touch.sum()),
+                                                  vals.shape[1])), 2)
+        grp = np.concatenate([grp[5:], rng.integers(0, 4, 5)])
+        cold = IncrementalMatcher(shard_size=128)
+        assert warm.match(vals, grp, ids) == cold.match(vals, grp, ids), rnd
+    assert warm.rounds == 6
+
+
+def test_incremental_matcher_reuses_clean_shards():
+    from repro.core.matching import IncrementalMatcher
+    rng = np.random.default_rng(1)
+    vals, grp, ids = _scheduler_instance(rng, 2000, 800)
+    m = IncrementalMatcher(shard_size=128)
+    first = m.match(vals, grp, ids)
+    again = m.match(vals, grp, ids)          # identical round
+    assert first == again
+    # round 1 is a full (cold) solve; round 2 reuses every shard
+    assert m.full_solves == 1
+    stats = m.stats()
+    assert stats["rounds"] == 2
+    assert stats["shards_reused"] == stats["shards_solved"] > 0
+
+
+def test_incremental_matcher_full_solve_on_heavy_churn():
+    from repro.core.matching import IncrementalMatcher
+    rng = np.random.default_rng(2)
+    m = IncrementalMatcher(shard_size=128, full_solve_dirty_frac=0.5)
+    vals, grp, ids = _scheduler_instance(rng, 1500, 600)
+    m.match(vals, grp, ids)
+    vals2 = np.round(rng.uniform(0, 1, vals.shape), 2)   # everything moved
+    cold = IncrementalMatcher(shard_size=128)
+    assert m.match(vals2, grp, ids) == cold.match(vals2, grp, ids)
+    assert m.full_solves >= 1
+
+
+def test_incremental_matcher_validity_and_quality():
+    from repro.core.matching import (IncrementalMatcher, km_match,
+                                     matching_weight)
+    rng = np.random.default_rng(7)
+    for n, m_cols in ((500, 200), (300, 700)):
+        vals = rng.uniform(0, 1, (n, 4))
+        grp = rng.integers(0, 4, m_cols)
+        w = vals[:, grp]
+        pairs = IncrementalMatcher(shard_size=128).match(
+            vals, grp, np.arange(n))
+        rows = [r for r, _ in pairs]
+        cols = [c for _, c in pairs]
+        assert len(set(rows)) == len(rows) and len(set(cols)) == len(cols)
+        assert all(0 <= r < n and 0 <= c < m_cols for r, c in pairs)
+        dense = matching_weight(w, km_match(w))
+        assert matching_weight(w, pairs) >= 0.97 * dense
+
+
+def test_incremental_matcher_small_problem_is_exact():
+    from repro.core.matching import (IncrementalMatcher, km_match,
+                                     matching_weight)
+    rng = np.random.default_rng(3)
+    vals = rng.uniform(0, 1, (40, 4))
+    grp = rng.integers(0, 4, 30)
+    pairs = IncrementalMatcher(shard_size=256).match(vals, grp,
+                                                     np.arange(40))
+    w = vals[:, grp]
+    assert matching_weight(w, pairs) == pytest.approx(
+        matching_weight(w, km_match(w)), rel=1e-9)
+
+
+# ----------------------------------------------------------- LRU predictor
+def test_cached_predictor_lru_bound_and_stats(predictor):
+    from repro.core.predictor import CachedSpeedPredictor
+    cached = CachedSpeedPredictor(predictor, quantum=0.0, max_entries=64)
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0, 1, (64, 9)).astype(np.float32)
+    cached.predict("T4", a)
+    assert len(cached._cache) == 64 and cached.evictions == 0
+    b = rng.uniform(0, 1, (32, 9)).astype(np.float32)
+    cached.predict("T4", b)
+    # bound holds; the 32 oldest rows were evicted LRU-first
+    assert len(cached._cache) == 64
+    assert cached.evictions == 32
+    # rows still resident answer from cache, and hits refresh recency
+    before = cached.hits
+    out1 = cached.predict("T4", b)
+    assert cached.hits == before + 32
+    np.testing.assert_array_equal(out1, cached.predict("T4", b))
+    stats = cached.stats()
+    for k in ("hits", "misses", "evictions", "entries", "hit_rate"):
+        assert k in stats
+    assert stats["entries"] == 64

@@ -281,16 +281,15 @@ def _mono_setup(matrix, measured_predictor):
     _MONO.clear()
 
 
-# --------------------------------------------------------- profiler shim
-def test_core_profiler_shim_warns_and_reexports():
+# --------------------------------------------------------- profiler home
+def test_core_profiler_shim_is_gone():
+    """The PR-4 deprecation shim has been removed: the profiler's single
+    home is repro.profiling.workloads, and the old import path now fails
+    loudly instead of warning."""
     import importlib
     import sys
-    import warnings
     sys.modules.pop("repro.core.profiler", None)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        mod = importlib.import_module("repro.core.profiler")
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    from repro.profiling.workloads import profile_step_fn
-    assert mod.profile_step_fn is profile_step_fn
-    assert mod.profile_from_trace("VGG16").name == "VGG16"
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.profiler")
+    from repro.profiling.workloads import profile_from_trace
+    assert profile_from_trace("VGG16").name == "VGG16"
