@@ -1,107 +1,24 @@
-"""Benchmark harness: one module per paper figure/table + system benches.
+"""Deprecated benchmark-harness entry point.
 
-Prints ``name,us_per_call,derived`` CSV rows (bench_lib.emit), or — with
-``--json`` — writes the schema-versioned ``BENCH_sim.json`` perf-trajectory
-artifact (fixed seeds, wall + per-phase breakdown for bench_sim_scale,
-overhead_matching, and kernel_bench) that CI uploads and diffs against the
-committed baseline.
-
-  PYTHONPATH=src python -m benchmarks.run              # all, CSV
-  PYTHONPATH=src python -m benchmarks.run fig11 fig4   # subset, CSV
-  PYTHONPATH=src python -m benchmarks.run --json BENCH_sim.json --smoke
+``python -m benchmarks.run`` is now a thin delegate of the unified CLI —
+``python -m repro bench`` (see :mod:`repro.cli`, which owns the suite
+tables).  Flags and stdout bytes (CSV rows / the ``BENCH_sim.json``
+artifact) are unchanged; a deprecation note goes to stderr.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
-import time
-import traceback
 
-SUITES = [
-    ("fig4", "benchmarks.fig4_sharing"),
-    ("fig10", "benchmarks.fig10_testbed"),
-    ("fig11", "benchmarks.fig11_comparison"),
-    ("fig12", "benchmarks.fig12_predictor"),
-    ("fig13", "benchmarks.fig13_ablation"),
-    ("fig14", "benchmarks.fig14_15_deployment"),
-    ("overhead", "benchmarks.overhead_matching"),
-    ("simscale", "benchmarks.bench_sim_scale"),
-    ("kernels", "benchmarks.kernel_bench"),
-]
-
-# the perf-trajectory suites: every module here exposes run_json(smoke)
-JSON_SUITES = [
-    ("bench_sim_scale", "benchmarks.bench_sim_scale"),
-    ("overhead_matching", "benchmarks.overhead_matching"),
-    ("kernel_bench", "benchmarks.kernel_bench"),
-]
-
-
-def run_csv(want: set[str]) -> int:
-    print("name,us_per_call,derived")
-    t_all = time.time()
-    failures = 0
-    for key, mod_name in SUITES:
-        if want and key not in want:
-            continue
-        t0 = time.time()
-        print(f"# === {mod_name} ===")
-        try:
-            import importlib
-            mod = importlib.import_module(mod_name)
-            mod.run()
-        except Exception:  # noqa: BLE001 — report, continue
-            failures += 1
-            print(f"# FAILED {mod_name}")
-            traceback.print_exc()
-        print(f"# {mod_name} took {time.time()-t0:.1f}s")
-    print(f"# total {time.time()-t_all:.1f}s, failures={failures}")
-    return failures
-
-
-def run_json_artifact(path: str, smoke: bool) -> int:
-    import importlib
-
-    from benchmarks.bench_schema import check_schema, make_artifact
-    suites = {}
-    failures = 0
-    for key, mod_name in JSON_SUITES:
-        t0 = time.time()
-        print(f"# === {mod_name} (json) ===", file=sys.stderr)
-        try:
-            suites[key] = importlib.import_module(mod_name).run_json(
-                smoke=smoke)
-        except Exception:  # noqa: BLE001 — report, continue
-            failures += 1
-            traceback.print_exc()
-        print(f"# {mod_name} took {time.time()-t0:.1f}s", file=sys.stderr)
-    doc = make_artifact(suites, smoke=smoke)
-    problems = [] if failures else check_schema(doc)
-    for p in problems:
-        print(f"# SCHEMA: {p}", file=sys.stderr)
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {path}", file=sys.stderr)
-    return failures + len(problems)
+from repro.cli import (BENCH_JSON_SUITES as JSON_SUITES,  # noqa: F401
+                       BENCH_SUITES as SUITES,
+                       bench_main, deprecation_note)
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("suites", nargs="*", help="CSV-mode suite subset")
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write the BENCH_sim.json perf artifact instead "
-                         "of CSV rows")
-    ap.add_argument("--smoke", action="store_true",
-                    help="small CI shapes for --json")
-    args = ap.parse_args(argv)
-    if args.json:
-        failures = run_json_artifact(args.json, smoke=args.smoke)
-    else:
-        failures = run_csv(set(args.suites))
-    if failures:
-        raise SystemExit(1)
+    deprecation_note("python -m benchmarks.run", "python -m repro bench")
+    rc = bench_main(argv, prog="python -m benchmarks.run")
+    if rc:
+        raise SystemExit(rc)
 
 
 if __name__ == "__main__":

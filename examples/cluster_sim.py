@@ -6,10 +6,8 @@ autoscaling) through `repro.cluster`.
 
   PYTHONPATH=src python examples/cluster_sim.py
 """
-from repro.cluster import run_scenario
-from repro.cluster.control import run_policy_scenario
-from repro.core.predictor import build_speed_predictor
-from repro.policies import resolve
+from repro.api import (build_speed_predictor, resolve, run_policy_scenario,
+                       run_scenario)
 
 
 def main() -> None:

@@ -11,10 +11,9 @@
 """
 import numpy as np
 
-from repro.core.dynamic_sm import dynamic_sm
-from repro.core.interference import OFFLINE_MODEL_PROFILES, online_profile
-from repro.core.predictor import build_speed_predictor
-from repro.core.scheduler import OfflineJob, OnlineSlot, schedule
+from repro.api import (OFFLINE_MODEL_PROFILES, OfflineJob, OnlineSlot,
+                       build_speed_predictor, dynamic_sm, online_profile,
+                       schedule)
 
 
 def main() -> None:

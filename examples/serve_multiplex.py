@@ -22,8 +22,8 @@ import threading
 import time
 
 import jax
-import numpy as np
 
+from repro.api import ArrivalProcess
 from repro.configs import get_config
 from repro.core.errors import GracefulExit
 from repro.core.multiplexer import Multiplexer, MuxConfig
@@ -85,13 +85,15 @@ def main() -> None:
         step_i[0] += 1
         return time.perf_counter() - t
 
-    rng = np.random.default_rng(0)
     n_req = 150
     # arrival rate sized so the device is ~half-loaded by online traffic;
     # the latency budget absorbs at most one offline microstep of queueing
-    # (the paper: latency demands >100ms, a ~10ms share-slowdown is fine)
-    arrivals = np.cumsum(rng.exponential(
-        max(base_step * 2.0, off_step * 1.2), n_req)).tolist()
+    # (the paper: latency demands >100ms, a ~10ms share-slowdown is fine).
+    # Same seeded ArrivalProcess the sim and profiler consume — one
+    # definition of "requests arrive" across the repo.
+    process = ArrivalProcess.poisson(
+        mean_gap=max(base_step * 2.0, off_step * 1.2), seed=0)
+    arrivals = process.first_n(n_req).tolist()
     horizon = arrivals[-1] + 0.5
     budget = base_step * 2 + off_step * 2.5
     print(f"\nserving {n_req} request batches over ~{horizon:.1f}s; "

@@ -1,0 +1,7 @@
+"""``python -m repro`` — the unified CLI front door (see repro.cli)."""
+import sys
+
+from repro.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""repro.api — the curated public surface.
+
+One import target for examples, notebooks, and downstream tooling, so they
+stop deep-importing private module paths (which this project treats as free
+to move between PRs).  Everything exported here is covered by tests and
+kept stable; anything not exported is an implementation detail.
+
+Groups:
+
+* **Policies** — :class:`SharingPolicy`, ``register`` / ``resolve`` /
+  ``available`` (the string-keyed sharing-policy registry);
+* **Engine** — ``build_sim_config`` (validated :class:`SimConfig` +
+  resolved policy), ``run_policy`` for bare engine runs, and the
+  Algorithm-1 pieces (``schedule``, ``OnlineSlot``, ``OfflineJob``,
+  ``dynamic_sm``, ``build_speed_predictor``, profile tables) the
+  quickstart composes by hand;
+* **Cluster** — the scenario registry (``Scenario``, ``SCENARIOS``,
+  ``scenario_by_name``) and runners (``run_scenario`` → JSON report,
+  ``run_policy_scenario`` → SimResults), plus ``check_schema`` /
+  ``REPORT_SCHEMA``;
+* **Serving** — :class:`ArrivalProcess` (the shared workload definition),
+  :class:`ServingConfig` / :class:`ServingPlane`, and the admission-policy
+  registry.
+"""
+from __future__ import annotations
+
+from repro.cluster.control import (REPORT_SCHEMA, check_schema, run_scenario,
+                                   run_policy_scenario)
+from repro.cluster.scenario import SCENARIOS, Scenario, scenario_by_name
+from repro.core.dynamic_sm import dynamic_sm
+from repro.core.interference import (OFFLINE_MODEL_PROFILES,
+                                     ONLINE_SERVICE_PROFILES, online_profile)
+from repro.core.predictor import build_speed_predictor
+from repro.core.scheduler import OfflineJob, OnlineSlot, schedule
+from repro.core.simulator import (SimConfig, SimResults, build_sim_config,
+                                  run_policy)
+from repro.policies import (SharingPolicy, available, register, resolve)
+from repro.serving_plane import (ARRIVAL_KINDS, AdmissionPolicy,
+                                 ArrivalProcess, ServingConfig, ServingPlane,
+                                 admission_available, register_admission,
+                                 resolve_admission)
+
+__all__ = [
+    # policies
+    "SharingPolicy", "available", "register", "resolve",
+    # engine
+    "SimConfig", "SimResults", "build_sim_config", "run_policy",
+    "schedule", "OnlineSlot", "OfflineJob", "dynamic_sm",
+    "build_speed_predictor", "online_profile",
+    "OFFLINE_MODEL_PROFILES", "ONLINE_SERVICE_PROFILES",
+    # cluster
+    "Scenario", "SCENARIOS", "scenario_by_name",
+    "run_scenario", "run_policy_scenario",
+    "check_schema", "REPORT_SCHEMA",
+    # serving
+    "ARRIVAL_KINDS", "ArrivalProcess", "AdmissionPolicy",
+    "ServingConfig", "ServingPlane",
+    "admission_available", "register_admission", "resolve_admission",
+]

@@ -1,0 +1,402 @@
+"""The one CLI front door: ``python -m repro <command> ...``.
+
+  PYTHONPATH=src python -m repro sim --scenario diurnal-mixed --seed 0
+  PYTHONPATH=src python -m repro serve --scenario serving-slo --out rep.json
+  PYTHONPATH=src python -m repro profile --suite smoke --out matrix.json
+  PYTHONPATH=src python -m repro bench --json BENCH_sim.json --smoke
+
+Commands share the reproducibility flags (``--seed`` / ``--engine`` /
+``--out`` / ``--check-schema``) and the byte-determinism contract: the same
+(command, flags, seed) always produces byte-identical artifacts, across
+processes and across tick engines.  Wall-clock chatter goes to stderr only.
+
+The historical entry points — ``python -m repro.cluster.run``,
+``python -m repro.profiling.run``, ``python -m benchmarks.run`` — remain as
+thin delegates (same stdout bytes, a deprecation note on stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+_USAGE = """\
+usage: python -m repro <command> [options]
+
+commands:
+  sim       run a cluster scenario -> deterministic JSON report
+  serve     run a request-level serving scenario (serving-plane focus)
+  profile   run a pair-profiling campaign -> speed-matrix artifact
+  bench     run the figure/system benchmarks (CSV or JSON artifact)
+
+`python -m repro <command> --help` shows each command's flags.
+"""
+
+
+# --------------------------------------------------------------------- sim
+def sim_main(argv=None, *, prog="python -m repro sim") -> int:
+    """Scenario-runner (the historical ``repro.cluster.run`` CLI)."""
+    from repro.cluster.control import check_schema, run_scenario
+    from repro.cluster.scenario import SCENARIOS, scenario_by_name
+    from repro.policies import available, resolve
+
+    ap = argparse.ArgumentParser(
+        prog=prog, description=sim_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--scenario", default="smoke",
+                    help="registry name (see --list)")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--hours", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--policy", default=None,
+                    help="sharing-policy override (see --list-policies)")
+    ap.add_argument("--engine", default=None, choices=("numpy", "xla"),
+                    help="tick-engine backend; reports are byte-identical "
+                         "across engines (numpy is the faster one on CPU "
+                         "today — see README 'Performance')")
+    ap.add_argument("--tick", type=float, default=None)
+    gx = ap.add_mutually_exclusive_group()
+    gx.add_argument("--graceful-exit", dest="graceful", action="store_true",
+                    default=None)
+    gx.add_argument("--no-graceful-exit", dest="graceful",
+                    action="store_false")
+    ap.add_argument("--out", default=None, help="write report JSON here "
+                    "(default: stdout)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    ap.add_argument("--list-policies", action="store_true",
+                    help="list registered sharing policies and exit")
+    ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
+                    help="validate an existing report file and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, sc in sorted(SCENARIOS.items()):
+            print(f"{name:16s} {sc.description}")
+        return 0
+    if args.list_policies:
+        for name in available():
+            pol = resolve(name)
+            tags = "".join(t for t, on in
+                           (("[needs-predictor] ", pol.needs_predictor),
+                            ("[no-scheduling] ", not pol.wants_scheduling))
+                           if on)
+            print(f"{name:18s} {tags}{pol.description}")
+        return 0
+    if args.check_schema:
+        return _check_schema_file(args.check_schema, check_schema)
+
+    sc = scenario_by_name(args.scenario)
+    t0 = time.perf_counter()
+    report = run_scenario(
+        sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
+        policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful,
+        engine=args.engine)
+    wall = time.perf_counter() - t0
+    _emit_json(report, args.out)
+    s = report["sim"]
+    print(f"[{sc.name}] {s['policy']} n={report['scenario']['n_devices']} "
+          f"{report['scenario']['hours']}h: finished "
+          f"{s['n_finished']}/{s['n_jobs']} jobs, slowdown "
+          f"{s['avg_slowdown']:.3f}x, errors {s['errors_propagated']}"
+          f"/{s['errors_injected']} propagated, "
+          f"{report['events']['n_events']} events "
+          f"({wall:.1f}s wall)", file=sys.stderr)
+    _emit_serving_note(report)
+    return 0
+
+
+# ------------------------------------------------------------------- serve
+def serve_main(argv=None) -> int:
+    """Serving-plane runner: a scenario with request-level accounting.
+
+    Same report pipeline as ``sim`` (full scenario report to stdout/--out),
+    defaulting to the ``serving-slo`` scenario and exposing the serving
+    knobs (arrival kind, load, admission policy, request-size skew) as
+    flags.  A scenario without a serving section gets the default
+    :class:`~repro.serving_plane.ServingConfig` attached.
+    """
+    import dataclasses
+
+    from repro.cluster.control import check_schema, run_scenario
+    from repro.cluster.scenario import scenario_by_name
+    from repro.serving_plane import (ARRIVAL_KINDS, ServingConfig,
+                                     admission_available)
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro serve", description=serve_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--scenario", default="serving-slo")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--hours", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--engine", default=None, choices=("numpy", "xla"))
+    ap.add_argument("--arrivals", default=None, choices=ARRIVAL_KINDS,
+                    help="arrival-process kind override")
+    ap.add_argument("--load", type=float, default=None,
+                    help="target mean utilization vs nominal capacity")
+    ap.add_argument("--admission", default=None,
+                    help=f"admission policy ({admission_available()})")
+    ap.add_argument("--request-size-sigma", type=float, default=None,
+                    help="lognormal request-size skew (0 = uniform sizes)")
+    ap.add_argument("--out", default=None, help="write report JSON here "
+                    "(default: stdout)")
+    ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
+                    help="validate an existing report file and exit")
+    args = ap.parse_args(argv)
+
+    if args.check_schema:
+        return _check_schema_file(args.check_schema, check_schema)
+
+    sc = scenario_by_name(args.scenario)
+    serving = sc.serving if sc.serving is not None else ServingConfig()
+    overrides = {k: v for k, v in (
+        ("arrivals", args.arrivals), ("load", args.load),
+        ("admission", args.admission),
+        ("request_size_sigma", args.request_size_sigma)) if v is not None}
+    if overrides:
+        serving = dataclasses.replace(serving, **overrides)
+    t0 = time.perf_counter()
+    report = run_scenario(
+        sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
+        engine=args.engine, serving=serving)
+    wall = time.perf_counter() - t0
+    _emit_json(report, args.out)
+    _emit_serving_note(report)
+    print(f"[{sc.name}] ({wall:.1f}s wall)", file=sys.stderr)
+    return 0
+
+
+# ----------------------------------------------------------------- profile
+def profile_main(argv=None, *, prog="python -m repro profile") -> int:
+    """Pair-profiling campaign (the historical ``repro.profiling.run`` CLI).
+
+    Executes the workload catalog (Pallas kernels in interpret mode on
+    CPU), profiles every online × offline pair across the suite's SM-share
+    sweep, and writes the speed-matrix artifact.
+    """
+    from repro.profiling.harness import (SUITES, PairProfiler,
+                                         build_speed_matrix)  # noqa: F401
+    from repro.profiling.matrix import SpeedMatrix, check_schema
+    from repro.profiling.workloads import build_catalog
+
+    ap = argparse.ArgumentParser(
+        prog=prog, description=profile_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--suite", default="smoke", choices=sorted(SUITES),
+                    help="profiling campaign (smoke: CI-sized; full: dense "
+                         "share sweep)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the speed-matrix JSON here (default: stdout)")
+    ap.add_argument("--no-interpret", dest="interpret", action="store_false",
+                    default=None,
+                    help="compile the kernels instead of interpret mode "
+                         "(default: interpret off-TPU)")
+    ap.add_argument("--list", action="store_true",
+                    help="list the workload catalog and exit")
+    ap.add_argument("--check-schema", metavar="MATRIX.json", default=None,
+                    help="validate an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, w in build_catalog().items():
+            print(f"{name:16s} {w.role:8s} seed={w.seed:<4d} "
+                  f"warmup={w.warmup} steps={w.steps} "
+                  f"cost={w.cost_s() * 1e3:.4f}ms "
+                  f"flops/step={w.flops_per_step:.3g}")
+        return 0
+    if args.check_schema:
+        return _check_schema_file(args.check_schema, check_schema)
+
+    t0 = time.perf_counter()
+    sc = SUITES[args.suite]
+    prof = PairProfiler(sc, seed=args.seed, interpret=args.interpret)
+    records, grid = prof.run()
+    matrix = SpeedMatrix.from_run(sc, args.seed, prof, records, grid)
+    wall = time.perf_counter() - t0
+    out = matrix.to_json()
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out)
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(out, end="")
+    for name, rec in records.items():
+        print(f"[exec] {name:16s} {rec.steps_executed} steps, "
+              f"{rec.wall_ms_per_step:.2f} ms/step wall, "
+              f"checksum {rec.checksum}", file=sys.stderr)
+    n_cells = sum(len(cells) for cells in grid.values())
+    print(f"[{args.suite}] {len(records)} workloads, {len(grid)} pairs, "
+          f"{n_cells} cells, quantum {prof.quantum_s() * 1e6:.2f}us "
+          f"({wall:.1f}s wall)", file=sys.stderr)
+    return 0
+
+
+# ------------------------------------------------------------------- bench
+def bench_main(argv=None, *, prog="python -m repro bench") -> int:
+    """Benchmark harness (the historical ``benchmarks.run`` CLI): one
+    module per paper figure/table plus the system benches.  Prints
+    ``name,us_per_call,derived`` CSV rows, or with ``--json`` writes the
+    schema-versioned perf-trajectory artifact CI diffs.
+    """
+    ap = argparse.ArgumentParser(
+        prog=prog, description=bench_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("suites", nargs="*", help="CSV-mode suite subset")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the BENCH_sim.json perf artifact instead "
+                         "of CSV rows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI shapes for --json")
+    args = ap.parse_args(argv)
+    try:
+        import benchmarks.run  # noqa: F401 — repo-root package, not in src/
+    except ImportError:
+        print("benchmarks package not importable — run from the repo root "
+              "(it lives next to src/, not inside it)", file=sys.stderr)
+        return 2
+    if args.json:
+        failures = _bench_json(args.json, smoke=args.smoke)
+    else:
+        failures = _bench_csv(set(args.suites))
+    return 1 if failures else 0
+
+
+#: (key, module) benchmark tables — the single home; benchmarks/run.py and
+#: this CLI both read them
+BENCH_SUITES = [
+    ("fig4", "benchmarks.fig4_sharing"),
+    ("fig10", "benchmarks.fig10_testbed"),
+    ("fig11", "benchmarks.fig11_comparison"),
+    ("fig12", "benchmarks.fig12_predictor"),
+    ("fig13", "benchmarks.fig13_ablation"),
+    ("fig14", "benchmarks.fig14_15_deployment"),
+    ("overhead", "benchmarks.overhead_matching"),
+    ("simscale", "benchmarks.bench_sim_scale"),
+    ("kernels", "benchmarks.kernel_bench"),
+]
+
+# the perf-trajectory suites: every module here exposes run_json(smoke)
+BENCH_JSON_SUITES = [
+    ("bench_sim_scale", "benchmarks.bench_sim_scale"),
+    ("overhead_matching", "benchmarks.overhead_matching"),
+    ("kernel_bench", "benchmarks.kernel_bench"),
+]
+
+
+def _bench_csv(want: set) -> int:
+    import importlib
+    import traceback
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = 0
+    for key, mod_name in BENCH_SUITES:
+        if want and key not in want:
+            continue
+        t0 = time.time()
+        print(f"# === {mod_name} ===")
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        except Exception:  # noqa: BLE001 — report, continue
+            failures += 1
+            print(f"# FAILED {mod_name}")
+            traceback.print_exc()
+        print(f"# {mod_name} took {time.time()-t0:.1f}s")
+    print(f"# total {time.time()-t_all:.1f}s, failures={failures}")
+    return failures
+
+
+def _bench_json(path: str, smoke: bool) -> int:
+    import importlib
+    import traceback
+
+    from benchmarks.bench_schema import check_schema, make_artifact
+    suites = {}
+    failures = 0
+    for key, mod_name in BENCH_JSON_SUITES:
+        t0 = time.time()
+        print(f"# === {mod_name} (json) ===", file=sys.stderr)
+        try:
+            suites[key] = importlib.import_module(mod_name).run_json(
+                smoke=smoke)
+        except Exception:  # noqa: BLE001 — report, continue
+            failures += 1
+            traceback.print_exc()
+        print(f"# {mod_name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    doc = make_artifact(suites, smoke=smoke)
+    problems = [] if failures else check_schema(doc)
+    for p in problems:
+        print(f"# SCHEMA: {p}", file=sys.stderr)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+    return failures + len(problems)
+
+
+# ----------------------------------------------------------------- helpers
+def _emit_json(report: dict, out_path) -> None:
+    out = json.dumps(report, indent=2, sort_keys=True)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(out + "\n")
+        print(f"wrote {out_path}", file=sys.stderr)
+    else:
+        print(out)
+
+
+def _emit_serving_note(report: dict) -> None:
+    serving = report.get("serving")
+    if not serving:
+        return
+    for svc, row in sorted(serving["services"].items()):
+        print(f"[serving] {svc:10s} p50 {row['p50_ms']:.1f}ms "
+              f"p99 {row['p99_ms']:.1f}ms slo {row['slo_ms']:.0f}ms "
+              f"attain {row['slo_attainment']:.4f} "
+              f"shed {row['shed']}/{row['arrived']}", file=sys.stderr)
+    tot = serving["total"]
+    print(f"[serving] total      p50 {tot['p50_ms']:.1f}ms "
+          f"p99 {tot['p99_ms']:.1f}ms attain {tot['slo_attainment']:.4f} "
+          f"shed {tot['shed']}/{tot['arrived']}", file=sys.stderr)
+
+
+def _check_schema_file(path: str, checker) -> int:
+    with open(path) as f:
+        problems = checker(json.load(f))
+    for p in problems:
+        print(f"SCHEMA: {p}", file=sys.stderr)
+    print("schema " + ("FAIL" if problems else "OK"), file=sys.stderr)
+    return 1 if problems else 0
+
+
+def deprecation_note(old: str, new: str) -> None:
+    """The legacy entry points' stderr-only notice — stdout bytes stay
+    identical to the new CLI's, so artifact pipelines are unaffected."""
+    print(f"note: `{old}` is deprecated; use `{new}` "
+          f"(same flags, same output bytes)", file=sys.stderr)
+
+
+# ---------------------------------------------------------------- dispatch
+COMMANDS = {
+    "sim": sim_main,
+    "serve": serve_main,
+    "profile": profile_main,
+    "bench": bench_main,
+}
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(_USAGE, end="")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    fn = COMMANDS.get(cmd)
+    if fn is None:
+        print(f"unknown command {cmd!r}; available: "
+              f"{' '.join(sorted(COMMANDS))}", file=sys.stderr)
+        return 2
+    return int(fn(rest) or 0)

@@ -36,8 +36,42 @@ from repro.core.simulator import (ClusterSim, SimConfig, SimHooks,
                                   build_sim_config)
 from repro.core.traces import SERVICES, make_trace
 from repro.policies import resolve as resolve_policy
+from repro.serving_plane import SERVING_SCHEMA, ServingPlane
 
-REPORT_SCHEMA = "repro.cluster.report/v1"
+# v2: adds the top-level "serving" section (request-level serving plane;
+# null when the scenario runs without one)
+REPORT_SCHEMA = "repro.cluster.report/v2"
+
+SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
+               "autoscaler", "serving", "pools", "scheduler", "events")
+
+_SERVING_SVC_KEYS = ("arrived", "served", "shed", "p50_ms", "p99_ms",
+                     "slo_ms", "slo_attainment")
+
+
+def check_schema(report: dict) -> list[str]:
+    """Structural lint of a campaign report; returns a list of problems
+    (empty = OK).  Used by the CLI's ``--check-schema`` and CI."""
+    problems = []
+    if report.get("schema") != REPORT_SCHEMA:
+        problems.append(f"schema != {REPORT_SCHEMA!r}: "
+                        f"{report.get('schema')!r}")
+    for k in SCHEMA_KEYS:
+        if k not in report:
+            problems.append(f"missing top-level key {k!r}")
+    serving = report.get("serving")
+    if serving is not None:
+        if serving.get("schema") != SERVING_SCHEMA:
+            problems.append(f"serving.schema != {SERVING_SCHEMA!r}: "
+                            f"{serving.get('schema')!r}")
+        for req in ("services", "total"):
+            if req not in serving:
+                problems.append(f"missing serving key {req!r}")
+        for svc, row in sorted(serving.get("services", {}).items()):
+            for k in _SERVING_SVC_KEYS:
+                if k not in row:
+                    problems.append(f"serving service {svc!r} missing {k!r}")
+    return problems
 
 
 class _HookAdapter(SimHooks):
@@ -161,6 +195,15 @@ class ControlPlane:
                     replicas=max(1, int(n_svc * 0.6)),
                     qps_capacity_per_replica=(
                         ONLINE_SERVICE_PROFILES[svc]["qps_capacity"]))
+        # request-level serving plane: lane seeds derive from the scenario
+        # seed through a third decoupled stream (campaign and agents take
+        # the first two) so request arrivals never perturb — and are never
+        # perturbed by — the engine/campaign/agent RNG streams
+        self.serving = None
+        if sc.serving is not None:
+            self.serving = ServingPlane.from_sim(
+                self.sim, sc.serving, seed=sc.seed * 52361 + 3)
+            self.sim.attach_serving(self.serving)
         self.last_telemetry: dict = {}
         self.results = None
         self._t_end = 0.0
@@ -247,6 +290,8 @@ class ControlPlane:
                             "replicas": {svc: s.replicas for svc, s in
                                          sorted(self.scalers.items())}}
                            if self.scalers else None),
+            "serving": (self.serving.summary()
+                        if self.serving is not None else None),
             "pools": self.sim.pool_view(self._t_end),
             "scheduler": self._scheduler_telemetry(),
             "events": self.bus.summary(),

@@ -1,135 +1,23 @@
-"""Scenario-runner CLI for the cluster control plane.
+"""Deprecated scenario-runner entry point.
 
-  PYTHONPATH=src python -m repro.cluster.run --list
-  PYTHONPATH=src python -m repro.cluster.run --list-policies
-  PYTHONPATH=src python -m repro.cluster.run --scenario smoke \
-      --policy tally-priority
-  PYTHONPATH=src python -m repro.cluster.run --scenario smoke
-  PYTHONPATH=src python -m repro.cluster.run --scenario diurnal-mixed \
-      --devices 20000 --hours 12 --seed 0 --engine xla --out report.json
-  PYTHONPATH=src python -m repro.cluster.run --scenario fault-storm \
-      --no-graceful-exit --devices 500 --hours 2
-  PYTHONPATH=src python -m repro.cluster.run --check-schema report.json
-
-Reports are deterministic JSON (no wall-clock fields): the same scenario,
-devices, hours, and seed always produce byte-identical output — including
-across tick engines (--engine numpy and --engine xla emit the same bytes;
-CI diffs them).  Timing goes to stderr.
+``python -m repro.cluster.run`` is now a thin delegate of the unified CLI —
+``python -m repro sim`` (see :mod:`repro.cli`).  Flags and stdout bytes are
+unchanged; a deprecation note goes to stderr.  ``check_schema`` /
+``SCHEMA_KEYS`` live in :mod:`repro.cluster.control` now and are re-exported
+here for backward compatibility.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
-import time
 
-from repro.cluster.control import REPORT_SCHEMA, run_scenario
-from repro.cluster.scenario import SCENARIOS, scenario_by_name
-from repro.policies import available, resolve
-
-# top-level keys every v1 report must carry (None allowed for unused parts)
-SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
-               "autoscaler", "pools", "events")
-
-
-def check_schema(report: dict) -> list[str]:
-    """Validate the v1 report shape; returns a list of problems (empty=ok)."""
-    problems = []
-    if report.get("schema") != REPORT_SCHEMA:
-        problems.append(f"schema != {REPORT_SCHEMA!r}: "
-                        f"{report.get('schema')!r}")
-    for k in SCHEMA_KEYS:
-        if k not in report:
-            problems.append(f"missing key {k!r}")
-    ev = report.get("events") or {}
-    for k in ("n_events", "counts", "digest"):
-        if k not in ev:
-            problems.append(f"events missing {k!r}")
-    sim = report.get("sim") or {}
-    for k in ("policy", "n_jobs", "n_finished", "avg_slowdown",
-              "errors_injected", "errors_propagated"):
-        if k not in sim:
-            problems.append(f"sim missing {k!r}")
-    if not isinstance(report.get("pools"), list) or not report["pools"]:
-        problems.append("pools missing or empty")
-    return problems
+from repro.cluster.control import (REPORT_SCHEMA, SCHEMA_KEYS,  # noqa: F401
+                                   check_schema)
+from repro.cli import deprecation_note, sim_main
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.cluster.run", description=__doc__,
-        formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--scenario", default="smoke",
-                    help="registry name (see --list)")
-    ap.add_argument("--devices", type=int, default=None)
-    ap.add_argument("--hours", type=float, default=None)
-    ap.add_argument("--seed", type=int, default=None)
-    ap.add_argument("--policy", default=None,
-                    help="sharing-policy override (see --list-policies)")
-    ap.add_argument("--engine", default=None, choices=("numpy", "xla"),
-                    help="tick-engine backend; reports are byte-identical "
-                         "across engines (numpy is the faster one on CPU "
-                         "today — see README 'Performance')")
-    ap.add_argument("--tick", type=float, default=None)
-    gx = ap.add_mutually_exclusive_group()
-    gx.add_argument("--graceful-exit", dest="graceful", action="store_true",
-                    default=None)
-    gx.add_argument("--no-graceful-exit", dest="graceful",
-                    action="store_false")
-    ap.add_argument("--out", default=None, help="write report JSON here "
-                    "(default: stdout)")
-    ap.add_argument("--list", action="store_true",
-                    help="list registered scenarios and exit")
-    ap.add_argument("--list-policies", action="store_true",
-                    help="list registered sharing policies and exit")
-    ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
-                    help="validate an existing report file and exit")
-    args = ap.parse_args(argv)
-
-    if args.list:
-        for name, sc in sorted(SCENARIOS.items()):
-            print(f"{name:16s} {sc.description}")
-        return 0
-    if args.list_policies:
-        for name in available():
-            pol = resolve(name)
-            tags = "".join(t for t, on in
-                           (("[needs-predictor] ", pol.needs_predictor),
-                            ("[no-scheduling] ", not pol.wants_scheduling))
-                           if on)
-            print(f"{name:18s} {tags}{pol.description}")
-        return 0
-    if args.check_schema:
-        with open(args.check_schema) as f:
-            problems = check_schema(json.load(f))
-        for p in problems:
-            print(f"SCHEMA: {p}", file=sys.stderr)
-        print("schema " + ("FAIL" if problems else "OK"), file=sys.stderr)
-        return 1 if problems else 0
-
-    sc = scenario_by_name(args.scenario)
-    t0 = time.perf_counter()
-    report = run_scenario(
-        sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
-        policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful,
-        engine=args.engine)
-    wall = time.perf_counter() - t0
-    out = json.dumps(report, indent=2, sort_keys=True)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(out + "\n")
-        print(f"wrote {args.out}", file=sys.stderr)
-    else:
-        print(out)
-    s = report["sim"]
-    print(f"[{sc.name}] {s['policy']} n={report['scenario']['n_devices']} "
-          f"{report['scenario']['hours']}h: finished "
-          f"{s['n_finished']}/{s['n_jobs']} jobs, slowdown "
-          f"{s['avg_slowdown']:.3f}x, errors {s['errors_propagated']}"
-          f"/{s['errors_injected']} propagated, "
-          f"{report['events']['n_events']} events "
-          f"({wall:.1f}s wall)", file=sys.stderr)
-    return 0
+    deprecation_note("python -m repro.cluster.run", "python -m repro sim")
+    return sim_main(argv, prog="python -m repro.cluster.run")
 
 
 if __name__ == "__main__":

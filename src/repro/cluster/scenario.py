@@ -15,6 +15,7 @@ from repro.cluster.agents import AgentConfig
 from repro.cluster.faults import FaultCampaignConfig
 from repro.cluster.fleet import GPUPool
 from repro.policies import SharingPolicy, policy_name
+from repro.serving_plane import ServingConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,8 @@ class Scenario:
     agents: AgentConfig | None = dataclasses.field(
         default_factory=AgentConfig)
     autoscale: bool = False
+    # request-level serving plane (None -> curve-level accounting only)
+    serving: ServingConfig | None = None
     external_jobs: bool = True              # submit via the control plane
     keep_event_log: bool = False
     strict_lifecycle: bool = True
@@ -155,6 +158,20 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
                     "schedules with a measured-trained predictor.",
         policy="muxflow-measured", trace="B", pools=_HETERO_POOLS,
         agents=AgentConfig()),
+    Scenario(
+        name="serving-slo",
+        description="Request-level serving campaign: diurnal arrivals with "
+                    "Philly-style skewed request sizes drive per-service "
+                    "queues through continuous batching; deadline admission "
+                    "sheds SLO-doomed requests; the report's 'serving' "
+                    "section judges the run on p50/p99 and SLO attainment.",
+        trace="B", pools=_HETERO_POOLS,
+        faults=FaultCampaignConfig(rate_per_device_hour=0.02),
+        agents=AgentConfig(drop_rate=0.01),
+        autoscale=True,
+        serving=ServingConfig(arrivals="diurnal", load=0.85,
+                              request_size_sigma=0.8,
+                              admission="deadline")),
     Scenario(
         name="mig-partition",
         description="ParvaGPU-style static spatial partitioning under heavy "

@@ -8,7 +8,12 @@ the full vectorized SysMonitor state machine — is traced once as a
 over tick *blocks* with donated buffers.  Python is re-entered only at
 sparse event boundaries: job arrivals, scheduling rounds, control-plane
 hooks, and fault injections (the accounting pass in ``simulator.py`` replays
-each tick's sparse events from the kernel's stacked mask outputs).
+each tick's sparse events from the kernel's stacked mask outputs).  The
+same replay is what lets the request-level serving plane
+(:mod:`repro.serving_plane`) ride block mode unchanged: ``_account`` runs
+per tick, in order, on bitwise-identical arrays under both engines, so the
+plane's per-tick queue/admission updates — and the report's ``"serving"``
+section — are engine-invariant by construction.
 
 Bitwise parity contract
 -----------------------

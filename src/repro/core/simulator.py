@@ -352,6 +352,10 @@ class ClusterSim:
                                            "mem": [], "slowdown": [], "tput": []}
         # instrumentation for the scale benchmarks
         self.schedule_latencies: list[float] = []
+        # optional request-level serving plane (repro.serving_plane); driven
+        # from the engine-agnostic accounting epilogue so both tick engines
+        # feed it identical arrays
+        self.serving = None
         # step-loop state (the control plane drives ticks one at a time)
         self._job_i = 0
         self._next_sched = 0.0
@@ -374,6 +378,13 @@ class ClusterSim:
             raise ValueError(
                 f"unknown engine {cfg.engine!r}; available: {ENGINES}")
         self._xla = None
+
+    def attach_serving(self, plane) -> None:
+        """Attach a :class:`repro.serving_plane.ServingPlane`.  Its
+        ``on_tick(t, slowdown, act, outage)`` runs inside :meth:`_account`
+        — after the core arrays exist, before the tick closes — so request
+        accounting sees exactly what the results accounting sees."""
+        self.serving = plane
 
     @staticmethod
     def _scale_mem(profile, hbm_gb: float):
@@ -797,6 +808,8 @@ class ClusterSim:
         tput_n = int(busy.sum())
         tput_sum = float(tput[busy].sum())
         outage = core["outage_until"] > t
+        if self.serving is not None:
+            self.serving.on_tick(t, slowdown, act, outage)
         lat = self.base_latency * slowdown * np.where(outage, 10.0, 1.0)
         lat_a, qps_a = lat[act], inp["qps"][act]
         self._lat_sum += float((lat_a * qps_a).sum())

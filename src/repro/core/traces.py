@@ -165,6 +165,44 @@ def philly_like_trace(rng: np.random.Generator, *, n_jobs: int,
             for i in range(n_jobs)]
 
 
+def philly_request_times(rng: np.random.Generator, *, rate: float,
+                         horizon_s: float, diurnal_amp: float = 0.4,
+                         burst_rate_per_day: float = 6.0,
+                         burst_mult: float = 2.5,
+                         burst_len_s: float = 300.0) -> np.ndarray:
+    """Philly-style *request* arrival trace: skewed, bursty timestamps.
+
+    The Philly study (and the paper's "requests may suddenly burst")
+    motivates judging serving on realistic arrivals, not a smooth curve:
+    a diurnally modulated Poisson base (mean ``rate`` requests/s, relative
+    amplitude ``diurnal_amp``) overlaid with short heavy burst episodes
+    (``× burst_mult`` for ``burst_len_s``, ~``burst_rate_per_day`` per day).
+    Sampled by thinning against the peak rate — exact for an inhomogeneous
+    Poisson process — so the result is a pure function of (rng state,
+    parameters).
+    """
+    if rate <= 0 or horizon_s <= 0:
+        return np.empty(0, np.float64)
+    n_bursts = int(rng.poisson(burst_rate_per_day * horizon_s / DAY_S))
+    starts = np.sort(rng.uniform(0, horizon_s, n_bursts))
+    peak = rate * (1.0 + diurnal_amp) * max(burst_mult, 1.0)
+    # candidate stream at the peak rate (topped up to cover the horizon)
+    size = max(int(2 * horizon_s * peak), 8)
+    cand = np.cumsum(rng.exponential(1.0 / peak, size))
+    while cand.size and cand[-1] < horizon_s:
+        cand = np.concatenate(
+            [cand, cand[-1] + np.cumsum(rng.exponential(1.0 / peak, size))])
+    cand = cand[cand < horizon_s]
+    local = rate * (1.0 + diurnal_amp * np.sin(2 * np.pi * cand / DAY_S))
+    if n_bursts:
+        k = np.searchsorted(starts, cand, side="right") - 1
+        in_burst = (k >= 0) & (cand - starts[np.clip(k, 0, None)]
+                               < burst_len_s)
+        local = np.where(in_burst, local * burst_mult, local)
+    keep = rng.random(cand.size) * peak <= local
+    return cand[keep]
+
+
 def make_trace(name: str, n_devices: int, horizon_s: float,
                seed: int = 0) -> list[OfflineJobSpec]:
     """Traces A–D: different load factors (jobs per device per 12 h),

@@ -84,12 +84,17 @@ def _arrivals(online: Workload, on_cost: int, horizon: int,
               seed: int) -> np.ndarray:
     """Seeded Poisson arrival times (quanta).  Seeded by the online workload
     only, so every cell of a pair sweep sees the same request stream and the
-    slowdown comparison is paired."""
-    rng = np.random.default_rng(np.random.SeedSequence([seed, online.seed]))
+    slowdown comparison is paired.
+
+    Rides the shared :class:`ArrivalProcess` (``mean_gap`` passed through,
+    same ``SeedSequence``, same gap-batch size) — bit-for-bit the stream
+    this function historically sampled inline, so speed-matrix artifacts
+    are unchanged by the unification (CI ``cmp``s them)."""
+    from repro.serving_plane import ArrivalProcess
     mean_gap = on_cost / max(online.target_util, 0.05)
-    gaps = rng.exponential(mean_gap, size=max(int(2 * horizon / mean_gap), 8))
-    times = np.cumsum(gaps)
-    return times[times < horizon].astype(np.int64)
+    process = ArrivalProcess.poisson(mean_gap=mean_gap,
+                                     seed=[seed, online.seed])
+    return process.times(horizon).astype(np.int64)
 
 
 def _device_loop(on: Workload, off: Workload | None, on_cost: int,

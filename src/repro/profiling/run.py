@@ -1,87 +1,21 @@
-"""Profiling-campaign CLI.
+"""Deprecated profiling-campaign entry point.
 
-  PYTHONPATH=src python -m repro.profiling.run --list
-  PYTHONPATH=src python -m repro.profiling.run --suite smoke \
-      --out speed_matrix_smoke.json
-  PYTHONPATH=src python -m repro.profiling.run --suite full --seed 1
-  PYTHONPATH=src python -m repro.profiling.run \
-      --check-schema speed_matrix_smoke.json
-
-Executes the workload catalog (Pallas kernels in interpret mode on CPU),
-profiles every online×offline pair across the suite's SM-share sweep, and
-writes the speed-matrix artifact.  Artifacts are canonical JSON with no
-wall-clock fields: the same (suite, seed) always produces byte-identical
-output (CI ``cmp``s two runs).  Wall-time execution stats go to stderr.
+``python -m repro.profiling.run`` is now a thin delegate of the unified CLI
+— ``python -m repro profile`` (see :mod:`repro.cli`).  Flags and stdout
+bytes (the speed-matrix artifact) are unchanged; a deprecation note goes to
+stderr.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
-import time
 
-from repro.profiling.harness import SUITES, PairProfiler, build_speed_matrix
-from repro.profiling.matrix import SpeedMatrix, check_schema
-from repro.profiling.workloads import build_catalog
+from repro.cli import deprecation_note, profile_main
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.profiling.run", description=__doc__,
-        formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--suite", default="smoke", choices=sorted(SUITES),
-                    help="profiling campaign (smoke: CI-sized; full: dense "
-                         "share sweep)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None,
-                    help="write the speed-matrix JSON here (default: stdout)")
-    ap.add_argument("--no-interpret", dest="interpret", action="store_false",
-                    default=None,
-                    help="compile the kernels instead of interpret mode "
-                         "(default: interpret off-TPU)")
-    ap.add_argument("--list", action="store_true",
-                    help="list the workload catalog and exit")
-    ap.add_argument("--check-schema", metavar="MATRIX.json", default=None,
-                    help="validate an existing artifact and exit")
-    args = ap.parse_args(argv)
-
-    if args.list:
-        for name, w in build_catalog().items():
-            print(f"{name:16s} {w.role:8s} seed={w.seed:<4d} "
-                  f"warmup={w.warmup} steps={w.steps} "
-                  f"cost={w.cost_s() * 1e3:.4f}ms "
-                  f"flops/step={w.flops_per_step:.3g}")
-        return 0
-    if args.check_schema:
-        with open(args.check_schema) as f:
-            problems = check_schema(json.load(f))
-        for p in problems:
-            print(f"SCHEMA: {p}", file=sys.stderr)
-        print("schema " + ("FAIL" if problems else "OK"), file=sys.stderr)
-        return 1 if problems else 0
-
-    t0 = time.perf_counter()
-    sc = SUITES[args.suite]
-    prof = PairProfiler(sc, seed=args.seed, interpret=args.interpret)
-    records, grid = prof.run()
-    matrix = SpeedMatrix.from_run(sc, args.seed, prof, records, grid)
-    wall = time.perf_counter() - t0
-    out = matrix.to_json()
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(out)
-        print(f"wrote {args.out}", file=sys.stderr)
-    else:
-        print(out, end="")
-    for name, rec in records.items():
-        print(f"[exec] {name:16s} {rec.steps_executed} steps, "
-              f"{rec.wall_ms_per_step:.2f} ms/step wall, "
-              f"checksum {rec.checksum}", file=sys.stderr)
-    n_cells = sum(len(cells) for cells in grid.values())
-    print(f"[{args.suite}] {len(records)} workloads, {len(grid)} pairs, "
-          f"{n_cells} cells, quantum {prof.quantum_s() * 1e6:.2f}us "
-          f"({wall:.1f}s wall)", file=sys.stderr)
-    return 0
+    deprecation_note("python -m repro.profiling.run",
+                     "python -m repro profile")
+    return profile_main(argv, prog="python -m repro.profiling.run")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,273 @@
+"""Serving-plane tests: ArrivalProcess properties, admission control, the
+serving report section's byte-determinism, and the unified CLI seams."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cluster.control import check_schema, run_scenario
+from repro.cluster.scenario import scenario_by_name
+from repro.serving_plane import (ARRIVAL_KINDS, ArrivalProcess,
+                                 DeadlineAdmission, NoAdmission,
+                                 ServingConfig, admission_available,
+                                 resolve_admission)
+from repro.serving_plane.arrivals import expected_count
+
+# ---------------------------------------------------------------------------
+# ArrivalProcess properties
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_times_matches_legacy_harness_stream():
+    # the exact inline formula profiling/harness.py historically used —
+    # ArrivalProcess.poisson(mean_gap=...) must reproduce it bit-for-bit
+    seed, wl_seed, on_cost, horizon, target_util = 3, 17, 7, 5000, 0.5
+    rng = np.random.default_rng(np.random.SeedSequence([seed, wl_seed]))
+    mean_gap = on_cost / max(target_util, 0.05)
+    gaps = rng.exponential(mean_gap, size=max(int(2 * horizon / mean_gap), 8))
+    legacy = np.cumsum(gaps)
+    legacy = legacy[legacy < horizon]
+    proc = ArrivalProcess.poisson(mean_gap=mean_gap, seed=[seed, wl_seed])
+    got = proc.times(horizon)
+    assert got.shape == legacy.shape
+    assert (got == legacy).all()
+
+
+def test_first_n_matches_legacy_serve_multiplex_stream():
+    mean_gap = 0.0321
+    legacy = np.cumsum(np.random.default_rng(
+        np.random.SeedSequence(0)).exponential(mean_gap, 150))
+    got = ArrivalProcess.poisson(mean_gap=mean_gap, seed=0).first_n(150)
+    assert (got == legacy).all()
+
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_seed_determinism_within_process(kind):
+    def build():
+        if kind == "poisson":
+            return ArrivalProcess.poisson(2.0, seed=5)
+        if kind == "diurnal":
+            return ArrivalProcess.diurnal(
+                lambda t: 2.0 + np.sin(t / 50.0), seed=5)
+        if kind == "burst":
+            return ArrivalProcess.burst(2.0, mult=3.0, period_s=100.0,
+                                        burst_len_s=20.0, seed=5)
+        return ArrivalProcess.trace_replay(np.arange(0.0, 100.0, 0.5))
+
+    a, b = build(), build()
+    assert (a.times(200.0) == b.times(200.0)).all()
+    ca = [a.counts_at(t, 1.0) for t in range(100)]
+    cb = [b.counts_at(t, 1.0) for t in range(100)]
+    assert ca == cb
+    a.reset()
+    assert ca == [a.counts_at(t, 1.0) for t in range(100)]
+
+
+def test_seed_determinism_across_processes():
+    # the SeedSequence contract: no builtin hash() anywhere in the stream,
+    # so a fresh interpreter reproduces the identical bytes
+    code = (
+        "import hashlib, numpy as np\n"
+        "from repro.serving_plane import ArrivalProcess\n"
+        "p = ArrivalProcess.burst(3.0, mult=2.5, period_s=60.0,"
+        " burst_len_s=10.0, seed=[1, 2])\n"
+        "h = hashlib.sha256(p.times(500.0).tobytes())\n"
+        "h.update(bytes(p.counts_at(t, 1.0) % 256 for t in range(200)))\n"
+        "print(h.hexdigest())\n")
+    outs = {subprocess.run([sys.executable, "-c", code], check=True,
+                           capture_output=True, text=True).stdout
+            for _ in range(2)}
+    assert len(outs) == 1
+
+
+def test_diurnal_rate_parity_with_qps_bank():
+    # from_qps_bank's rate() must be *definitionally* the sim's QPS curve
+    from repro.core.traces import OnlineQPS, QPSBank
+    rng = np.random.default_rng(0)
+    bank = QPSBank([OnlineQPS(rng) for _ in range(12)])
+    mask = np.arange(12) % 3 == 0
+    proc = ArrivalProcess.from_qps_bank(bank, mask=mask, scale=0.25, seed=1)
+    for t in (0.0, 777.0, 43200.0, 86399.0):
+        assert proc.rate(t) == 0.25 * float(bank.qps(t)[mask].sum())
+
+
+@pytest.mark.parametrize("kind", ["poisson", "diurnal", "burst"])
+def test_rate_conservation(kind):
+    # times() and counts_at() must both realize E[N] = integral of rate
+    if kind == "poisson":
+        proc = ArrivalProcess.poisson(4.0, seed=9)
+    elif kind == "diurnal":
+        proc = ArrivalProcess.diurnal(
+            lambda t: 4.0 + 2.0 * np.sin(t / 200.0), seed=9)
+    else:
+        proc = ArrivalProcess.burst(4.0, mult=3.0, period_s=500.0,
+                                    burst_len_s=100.0, seed=9)
+    horizon = 4000.0
+    expect = expected_count(proc, horizon, dt=1.0)
+    n_times = proc.times(horizon).size
+    proc.reset()
+    n_counts = sum(proc.counts_at(float(t), 1.0) for t in range(int(horizon)))
+    # ~16k arrivals: 5% tolerance is > 6 sigma, deterministic under the seed
+    assert abs(n_times - expect) / expect < 0.05
+    assert abs(n_counts - expect) / expect < 0.05
+
+
+def test_trace_replay_counts_partition_the_trace():
+    times = np.sort(np.random.default_rng(3).uniform(0, 100.0, 500))
+    proc = ArrivalProcess.trace_replay(times)
+    total = sum(proc.counts_at(float(t), 5.0) for t in range(0, 100, 5))
+    assert total == 500
+    assert (proc.times(50.0) == times[times < 50.0]).all()
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        ArrivalProcess.poisson()                      # neither rate nor gap
+    with pytest.raises(ValueError):
+        ArrivalProcess.poisson(2.0, mean_gap=0.5)     # both
+    with pytest.raises(ValueError):
+        ArrivalProcess.poisson(-1.0)
+    with pytest.raises(ValueError):
+        ArrivalProcess("weibull")
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_registry():
+    assert set(admission_available()) >= {"none", "deadline"}
+    assert isinstance(resolve_admission("none", slack=9.0), NoAdmission)
+    pol = resolve_admission("deadline", slack=0.5)
+    assert isinstance(pol, DeadlineAdmission) and pol.slack == 0.5
+    assert resolve_admission(pol) is pol
+    with pytest.raises(ValueError):
+        resolve_admission("nope")
+    with pytest.raises(ValueError):
+        DeadlineAdmission(slack=0.0)
+
+
+def test_deadline_sheds_only_past_deadline():
+    pol = DeadlineAdmission(slack=1.0)
+    ages = np.array([0.0, 0.1, 0.5, 2.0])
+    counts = np.array([10, 10, 10, 10])
+    shed = pol.shed(0.0, ages, counts, slo_s=0.6, service_s=0.1,
+                    capacity_rps=100.0)
+    # deadline = 0.6 - 0.1 = 0.5; only the 2.0s-old cohort is doomed
+    assert shed.tolist() == [0, 0, 0, 10]
+    none = NoAdmission().shed(0.0, ages, counts, slo_s=0.6, service_s=0.1,
+                              capacity_rps=100.0)
+    assert none.tolist() == [0, 0, 0, 0]
+
+
+def _serving_report(load, *, admission="deadline", seed=0):
+    sc = scenario_by_name("serving-slo")
+    serving = ServingConfig(arrivals="diurnal", load=load,
+                            request_size_sigma=0.8, admission=admission)
+    return run_scenario(sc, n_devices=24, hours=0.5, seed=seed,
+                        serving=serving)
+
+
+def test_zero_shed_at_low_load_and_monotone_in_load():
+    lo = _serving_report(0.05)["serving"]
+    hi = _serving_report(1.3)["serving"]
+    assert lo["total"]["shed"] == 0
+    assert lo["total"]["slo_attainment"] == 1.0
+    assert hi["total"]["shed"] > lo["total"]["shed"]
+    assert hi["total"]["slo_attainment"] < lo["total"]["slo_attainment"]
+    # per-service sections carry the required columns
+    for row in hi["services"].values():
+        for k in ("p50_ms", "p99_ms", "slo_ms", "slo_attainment",
+                  "shed", "arrived", "served"):
+            assert k in row
+        assert row["p99_ms"] >= row["p50_ms"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Serving report determinism
+# ---------------------------------------------------------------------------
+
+
+def test_serving_report_deterministic_and_engine_invariant():
+    kw = dict(n_devices=24, hours=0.5, seed=1)
+    a = run_scenario("serving-slo", **kw)
+    b = run_scenario("serving-slo", **kw)
+    x = run_scenario("serving-slo", engine="xla", **kw)
+    ja, jb, jx = (json.dumps(r, sort_keys=True) for r in (a, b, x))
+    assert ja == jb            # same seed, same process -> same bytes
+    assert ja == jx            # numpy and xla engines -> same bytes
+    assert check_schema(a) == []
+    serving = a["serving"]
+    assert serving["schema"] == "repro.serving/v1"
+    assert set(serving["services"]) == {"recommend", "translate", "vision"}
+    tot = serving["total"]
+    assert tot["arrived"] == (tot["served"] + tot["shed"]
+                              + tot["queued_end"])
+
+
+def test_non_serving_scenarios_report_null_section():
+    rep = run_scenario("smoke", n_devices=16, hours=0.5, seed=0)
+    assert rep["serving"] is None
+    assert check_schema(rep) == []
+
+
+def test_check_schema_flags_missing_serving_columns():
+    rep = run_scenario("serving-slo", n_devices=16, hours=0.5, seed=0)
+    del rep["serving"]["services"]["vision"]["p99_ms"]
+    assert any("p99_ms" in p for p in check_schema(rep))
+    rep["serving"]["schema"] = "bogus"
+    assert any("serving.schema" in p for p in check_schema(rep))
+
+
+# ---------------------------------------------------------------------------
+# Unified CLI + legacy delegates
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(args):
+    return subprocess.run([sys.executable, *args], capture_output=True,
+                          text=True)
+
+
+def test_new_cli_and_legacy_delegate_emit_identical_bytes():
+    flags = ["--scenario", "smoke", "--devices", "16", "--hours", "0.5",
+             "--seed", "0"]
+    new = _run_cli(["-m", "repro", "sim", *flags])
+    old = _run_cli(["-m", "repro.cluster.run", *flags])
+    assert new.returncode == 0 and old.returncode == 0
+    assert new.stdout == old.stdout            # byte-identical artifact
+    assert "deprecated" in old.stderr          # note on stderr only
+    assert "deprecated" not in new.stderr
+
+
+def test_cli_dispatcher_usage_and_unknown_command():
+    assert "commands:" in _run_cli(["-m", "repro", "--help"]).stdout
+    bad = _run_cli(["-m", "repro", "frobnicate"])
+    assert bad.returncode == 2
+    assert "unknown command" in bad.stderr
+
+
+def test_bench_delegate_reexports_suite_tables():
+    import benchmarks.run as br
+    from repro.cli import BENCH_JSON_SUITES, BENCH_SUITES
+    assert br.SUITES is BENCH_SUITES
+    assert br.JSON_SUITES is BENCH_JSON_SUITES
+
+
+# ---------------------------------------------------------------------------
+# Public API surface
+# ---------------------------------------------------------------------------
+
+
+def test_api_surface_exports_resolve():
+    import repro.api as api
+    for name in api.__all__:
+        assert getattr(api, name) is not None, name
+    # the curated surface covers the ISSUE-named entry points
+    for name in ("build_sim_config", "run_policy_scenario", "SharingPolicy",
+                 "register", "resolve", "ArrivalProcess", "SCENARIOS",
+                 "scenario_by_name"):
+        assert name in api.__all__
