@@ -24,6 +24,7 @@ _SUITE_KEYS = {
     "bench_sim_scale": ("cells", "phases"),
     "overhead_matching": ("steady_state", "km_scaling", "phases"),
     "kernel_bench": ("cells", "phases"),
+    "obs_overhead": ("cells", "overhead", "tick_phases", "phases"),
 }
 
 

@@ -1,0 +1,129 @@
+"""Observability overhead: obs-off vs obs-on wall time for diurnal-mixed.
+
+The acceptance budget for the observability plane is ≤5% added wall time on
+the flagship campaign's run phase (metrics + trace streaming enabled, full
+window rollups and span folding).  This suite measures it: the same
+``diurnal-mixed`` scenario runs with observability off and on (one shared,
+pre-built predictor; a warm-up run first so one-time jit compiles don't land
+in either measurement), and a third run profiles the tick-phase breakdown
+(inputs/predict/match/dense_core/account/serving) — the *only* place those
+wall-clock phase numbers are allowed to appear (they are quarantined from
+every deterministic artifact).
+
+  PYTHONPATH=src python benchmarks/obs_overhead.py          # full 20k x 12h
+  PYTHONPATH=src python benchmarks/obs_overhead.py --smoke  # tiny CI shape
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+
+def _scenario(smoke: bool):
+    from repro.cluster.scenario import scenario_by_name
+    sc = scenario_by_name("diurnal-mixed")
+    if smoke:
+        # big enough that per-tick work dominates per-run fixed costs —
+        # a 64-device half-hour run finishes in ~30ms and the off/on ratio
+        # is pure timer noise
+        return sc.with_overrides(n_devices=512, hours=3.0, seed=0,
+                                 predictor_samples=150, predictor_epochs=5)
+    return sc.with_overrides(n_devices=20000, hours=12.0, seed=0)
+
+
+def _build_predictor(sc):
+    """One predictor shared by every cell (the measured phase is run())."""
+    from repro.cluster.fleet import FleetSpec
+    from repro.policies import resolve
+    pol = resolve(sc.policy)
+    if not pol.needs_predictor:
+        return None
+    fleet = FleetSpec(sc.n_devices, sc.pools) if sc.pools else None
+    gpu_types = (fleet.gpu_types if fleet
+                 else tuple(dict.fromkeys(sc.gpu_types)))
+    return pol.build_predictor(gpu_types, samples=sc.predictor_samples,
+                               epochs=sc.predictor_epochs, seed=0)
+
+
+def _run_cell(sc, predictor, obs=None, profiler=None) -> tuple[float, object]:
+    from repro.cluster.control import ControlPlane
+    cp = ControlPlane(sc, predictor=predictor, obs=obs)
+    if profiler is not None:
+        cp.sim.attach_phases(profiler)
+    t0 = time.perf_counter()
+    cp.run()
+    return time.perf_counter() - t0, cp
+
+
+def run_json(smoke: bool = False, pairs: int = 2) -> dict:
+    from repro.obs import ObsConfig, PhaseProfiler
+    sc = _scenario(smoke)
+    t0 = time.perf_counter()
+    predictor = _build_predictor(sc)
+    t_pred = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory(prefix="obs_overhead_") as tmp:
+        obs = ObsConfig(metrics_out=os.path.join(tmp, "metrics.jsonl"),
+                        trace_out=os.path.join(tmp, "trace.jsonl"))
+        _run_cell(sc, predictor)                      # warm-up (jit, caches)
+        # single paired runs are noisy at flagship scale (shared-host VM
+        # jitter moves walls by ~10%); alternate off/on pairs and take the
+        # min wall of each — the standard de-noising for wall benchmarks
+        off_walls, on_walls = [], []
+        for _ in range(max(pairs, 1)):
+            w, _cp = _run_cell(sc, predictor)
+            off_walls.append(w)
+            w, cp_on = _run_cell(sc, predictor, obs=obs)
+            on_walls.append(w)
+        off_wall, on_wall = min(off_walls), min(on_walls)
+        obs_summary = cp_on.obs.summary()
+        prof = PhaseProfiler()
+        _run_cell(sc, predictor, obs=obs, profiler=prof)
+    base = {"scenario": sc.name, "n_devices": sc.n_devices,
+            "horizon_s": sc.horizon_seconds(), "engine": sc.engine}
+    ratio = on_wall / max(off_wall, 1e-9)
+    return {
+        "cells": [
+            {**base, "obs": False, "wall_s": off_wall},
+            {**base, "obs": True, "wall_s": on_wall,
+             "metrics_rows": obs_summary["metrics"]["rows"],
+             "metrics_windows": obs_summary["metrics"]["windows"],
+             "trace_rows": obs_summary["trace"]["rows"]},
+        ],
+        "overhead": {
+            "off_wall_s": off_wall,
+            "on_wall_s": on_wall,
+            "off_walls_s": off_walls,
+            "on_walls_s": on_walls,
+            "ratio": ratio,
+            # the ISSUE-7 acceptance budget; advisory in smoke mode (tiny
+            # shapes are dominated by fixed per-run costs and timer noise)
+            "within_budget": bool(ratio <= 1.05),
+        },
+        # wall-clock tick-phase breakdown — BENCH_sim.json is the one
+        # artifact this may enter (never deterministic reports/exports)
+        "tick_phases": prof.summary(),
+        "phases": {"predictor_train_s": t_pred},
+        "headline_walls": {"diurnal_obs_off": off_wall,
+                           "diurnal_obs_on": on_wall},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    doc = run_json(smoke=args.smoke)
+    ov = doc["overhead"]
+    print(f"obs off {ov['off_wall_s']:.2f}s  on {ov['on_wall_s']:.2f}s  "
+          f"ratio {ov['ratio']:.3f}  "
+          f"{'OK' if ov['within_budget'] else 'OVER BUDGET'}")
+    for name, row in doc["tick_phases"]["phases"].items():
+        print(f"  phase {name:12s} {row['wall_s']:.3f}s x{row['calls']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

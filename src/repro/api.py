@@ -20,12 +20,19 @@ Groups:
   ``REPORT_SCHEMA``;
 * **Serving** — :class:`ArrivalProcess` (the shared workload definition),
   :class:`ServingConfig` / :class:`ServingPlane`, and the admission-policy
-  registry.
+  registry;
+* **Observability** — :class:`ObsConfig` (pass as ``run_scenario(obs=...)``),
+  :class:`MetricsRegistry` / :class:`PhaseProfiler` for standalone use, and
+  the exporter helpers (``canonical_json``, ``prometheus_text``,
+  ``lint_prometheus``).
 """
 from __future__ import annotations
 
 from repro.cluster.control import (REPORT_SCHEMA, check_schema, run_scenario,
                                    run_policy_scenario)
+from repro.obs import (OBS_SCHEMA, MetricsRegistry, ObsConfig, ObsPlane,
+                       PhaseProfiler, canonical_json, lint_prometheus,
+                       prometheus_text)
 from repro.cluster.scenario import SCENARIOS, Scenario, scenario_by_name
 from repro.core.dynamic_sm import dynamic_sm
 from repro.core.interference import (OFFLINE_MODEL_PROFILES,
@@ -56,4 +63,8 @@ __all__ = [
     "ARRIVAL_KINDS", "ArrivalProcess", "AdmissionPolicy",
     "ServingConfig", "ServingPlane",
     "admission_available", "register_admission", "resolve_admission",
+    # observability
+    "ObsConfig", "ObsPlane", "OBS_SCHEMA",
+    "MetricsRegistry", "PhaseProfiler",
+    "canonical_json", "prometheus_text", "lint_prometheus",
 ]

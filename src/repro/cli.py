@@ -63,6 +63,7 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
                     action="store_false")
     ap.add_argument("--out", default=None, help="write report JSON here "
                     "(default: stdout)")
+    _add_obs_flags(ap)
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--list-policies", action="store_true",
@@ -92,7 +93,7 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
     report = run_scenario(
         sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
         policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful,
-        engine=args.engine)
+        engine=args.engine, obs=_obs_config(args))
     wall = time.perf_counter() - t0
     _emit_json(report, args.out)
     s = report["sim"]
@@ -104,6 +105,7 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
           f"{report['events']['n_events']} events "
           f"({wall:.1f}s wall)", file=sys.stderr)
     _emit_serving_note(report)
+    _emit_obs_note(report)
     return 0
 
 
@@ -142,6 +144,7 @@ def serve_main(argv=None) -> int:
                     help="lognormal request-size skew (0 = uniform sizes)")
     ap.add_argument("--out", default=None, help="write report JSON here "
                     "(default: stdout)")
+    _add_obs_flags(ap)
     ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
                     help="validate an existing report file and exit")
     args = ap.parse_args(argv)
@@ -160,10 +163,11 @@ def serve_main(argv=None) -> int:
     t0 = time.perf_counter()
     report = run_scenario(
         sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
-        engine=args.engine, serving=serving)
+        engine=args.engine, serving=serving, obs=_obs_config(args))
     wall = time.perf_counter() - t0
     _emit_json(report, args.out)
     _emit_serving_note(report)
+    _emit_obs_note(report)
     print(f"[{sc.name}] ({wall:.1f}s wall)", file=sys.stderr)
     return 0
 
@@ -283,6 +287,7 @@ BENCH_JSON_SUITES = [
     ("bench_sim_scale", "benchmarks.bench_sim_scale"),
     ("overhead_matching", "benchmarks.overhead_matching"),
     ("kernel_bench", "benchmarks.kernel_bench"),
+    ("obs_overhead", "benchmarks.obs_overhead"),
 ]
 
 
@@ -338,6 +343,51 @@ def _bench_json(path: str, smoke: bool) -> int:
 
 
 # ----------------------------------------------------------------- helpers
+def _add_obs_flags(ap) -> None:
+    g = ap.add_argument_group(
+        "observability (artifacts are byte-identical across same-seed "
+        "runs and across tick engines; see README 'Observability')")
+    g.add_argument("--metrics-out", default=None, metavar="METRICS.jsonl",
+                   help="write windowed fleet-metrics JSONL here")
+    g.add_argument("--trace-out", default=None, metavar="TRACE.jsonl",
+                   help="write job/request/fault trace JSONL here")
+    g.add_argument("--prom-out", default=None, metavar="METRICS.prom",
+                   help="write a Prometheus text-format snapshot here")
+    g.add_argument("--metrics-every", type=float, default=600.0,
+                   metavar="SECONDS",
+                   help="metrics rollup window in sim seconds "
+                        "(default: 600)")
+    g.add_argument("--profile-phases", action="store_true",
+                   help="wall-clock engine phase profile to stderr "
+                        "(quarantined: never enters artifacts)")
+
+
+def _obs_config(args):
+    if not (args.metrics_out or args.trace_out or args.prom_out
+            or args.profile_phases):
+        return None
+    from repro.obs import ObsConfig
+    return ObsConfig(metrics_out=args.metrics_out,
+                     trace_out=args.trace_out, prom_out=args.prom_out,
+                     metrics_every_s=args.metrics_every,
+                     profile_phases=args.profile_phases)
+
+
+def _emit_obs_note(report: dict) -> None:
+    obs = report.get("obs")
+    if not obs:
+        return
+    m, tr = obs.get("metrics"), obs.get("trace")
+    if m:
+        print(f"[obs] metrics: {m['rows']} rows, {m['windows']} windows, "
+              f"{m['series']} series, digest {m['digest'][:12]}",
+              file=sys.stderr)
+    if tr:
+        kinds = ", ".join(f"{k}={v}" for k, v in tr["kinds"].items())
+        print(f"[obs] trace: {tr['rows']} rows ({kinds}), "
+              f"digest {tr['digest'][:12]}", file=sys.stderr)
+
+
 def _emit_json(report: dict, out_path) -> None:
     out = json.dumps(report, indent=2, sort_keys=True)
     if out_path:

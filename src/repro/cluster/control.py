@@ -35,15 +35,19 @@ from repro.core.interference import ONLINE_SERVICE_PROFILES
 from repro.core.simulator import (ClusterSim, SimConfig, SimHooks,
                                   build_sim_config)
 from repro.core.traces import SERVICES, make_trace
+from repro.obs import OBS_SCHEMA, ObsPlane
 from repro.policies import resolve as resolve_policy
 from repro.serving_plane import SERVING_SCHEMA, ServingPlane
 
-# v2: adds the top-level "serving" section (request-level serving plane;
-# null when the scenario runs without one)
-REPORT_SCHEMA = "repro.cluster.report/v2"
+# v3: adds the top-level "obs" section (observability plane: emitted-series
+# counts and stream digests; null when no obs outputs were requested) and
+# the events summary's "log_dropped" count.
+# v2 added the "serving" section (request-level serving plane).
+REPORT_SCHEMA = "repro.cluster.report/v3"
 
 SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
-               "autoscaler", "serving", "pools", "scheduler", "events")
+               "autoscaler", "serving", "pools", "scheduler", "events",
+               "obs")
 
 _SERVING_SVC_KEYS = ("arrived", "served", "shed", "p50_ms", "p99_ms",
                      "slo_ms", "slo_attainment")
@@ -71,6 +75,23 @@ def check_schema(report: dict) -> list[str]:
             for k in _SERVING_SVC_KEYS:
                 if k not in row:
                     problems.append(f"serving service {svc!r} missing {k!r}")
+    obs = report.get("obs")
+    if obs is not None:
+        if obs.get("schema") != OBS_SCHEMA:
+            problems.append(f"obs.schema != {OBS_SCHEMA!r}: "
+                            f"{obs.get('schema')!r}")
+        for req in ("metrics", "trace", "profile_phases"):
+            if req not in obs:
+                problems.append(f"missing obs key {req!r}")
+        for section in ("metrics", "trace"):
+            row = obs.get(section)
+            if row is not None:
+                for k in ("rows", "digest"):
+                    if k not in row:
+                        problems.append(f"obs.{section} missing {k!r}")
+    events = report.get("events")
+    if isinstance(events, dict) and "log_dropped" not in events:
+        problems.append("events summary missing 'log_dropped'")
     return problems
 
 
@@ -126,7 +147,7 @@ class _HookAdapter(SimHooks):
 class ControlPlane:
     """Discrete-event control plane over the vectorized engine."""
 
-    def __init__(self, scenario: Scenario, predictor=None):
+    def __init__(self, scenario: Scenario, predictor=None, obs=None):
         sc = scenario
         self.scenario = sc
         self.bus = EventBus(keep_log=sc.keep_event_log)
@@ -204,6 +225,14 @@ class ControlPlane:
             self.serving = ServingPlane.from_sim(
                 self.sim, sc.serving, seed=sc.seed * 52361 + 3)
             self.sim.attach_serving(self.serving)
+        # observability plane: an ObsConfig, deliberately NOT a Scenario
+        # field — output paths are machine-local and the scenario echo in
+        # the report must stay byte-identical across machines.  Enabling
+        # obs never changes the report outside its own "obs" section.
+        self.obs = None
+        if obs is not None and obs.enabled:
+            self.obs = ObsPlane(obs, self.sim, bus=self.bus,
+                                serving=self.serving)
         self.last_telemetry: dict = {}
         self.results = None
         self._t_end = 0.0
@@ -228,6 +257,8 @@ class ControlPlane:
             t = sim.step(t)
         self._t_end = t
         self.results = sim.finalize(t)
+        if self.obs is not None:
+            self.obs.finalize(t)
         return self.results
 
     def _submit_due(self, t: float) -> None:
@@ -295,6 +326,8 @@ class ControlPlane:
             "pools": self.sim.pool_view(self._t_end),
             "scheduler": self._scheduler_telemetry(),
             "events": self.bus.summary(),
+            "obs": (self.obs.summary()
+                    if self.obs is not None else None),
         }
         return jsonify(rep)
 
@@ -330,15 +363,18 @@ def jsonify(obj):
     return obj
 
 
-def run_scenario(name_or_scenario, predictor=None, **overrides) -> dict:
+def run_scenario(name_or_scenario, predictor=None, obs=None,
+                 **overrides) -> dict:
     """Build, run, and report a scenario in one call.
 
     ``name_or_scenario`` is a registry name or a :class:`Scenario`;
-    ``overrides`` replace scenario fields (None values are ignored)."""
+    ``overrides`` replace scenario fields (None values are ignored);
+    ``obs`` is an optional :class:`repro.obs.ObsConfig` (metrics/trace/
+    Prometheus outputs and phase profiling — never a scenario field)."""
     sc = (scenario_by_name(name_or_scenario)
           if isinstance(name_or_scenario, str) else name_or_scenario)
     sc = sc.with_overrides(**overrides)
-    cp = ControlPlane(sc, predictor=predictor)
+    cp = ControlPlane(sc, predictor=predictor, obs=obs)
     cp.run()
     return cp.report()
 

@@ -92,5 +92,9 @@ class EventBus:
         return self._hash.hexdigest()
 
     def summary(self) -> dict:
+        """Counts + digest, plus ``log_dropped``: how many events the
+        capped ``log`` silently omitted (``digest``/``counts`` always cover
+        the full stream — only retention truncates)."""
         return {"n_events": self._seq, "counts": dict(sorted(
-            self.counts.items())), "digest": self.digest()}
+            self.counts.items())), "digest": self.digest(),
+            "log_dropped": self.dropped}

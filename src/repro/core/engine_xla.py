@@ -365,6 +365,17 @@ class XlaTickEngine:
             # the host-side masking the numpy core applies (shared formula)
             core["slowdown"] = np.where(busy, inp["slow_raw"], 1.0)
             core["tput"] = np.where(busy, inp["tput_speed"], 0.0)
+            # post-tick state snapshots for the obs rollups (core contract
+            # shared with the numpy engine): per-tick scan copies in block
+            # mode — the synced live arrays hold only the *last* accepted
+            # tick's state — and the synced carry at T=1 (where they are
+            # one and the same)
+            if T == 1:
+                core["has_job"] = s.has_job
+                core["mstate"] = mon.state
+            else:
+                core["has_job"] = ys["has_job"][j]
+                core["mstate"] = ys["mstate"][j]
             cores.append(core)
             # sparse host-side monitor ring work, per tick and in order —
             # through the same VectorSysMonitor primitives the numpy

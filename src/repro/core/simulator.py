@@ -356,6 +356,11 @@ class ClusterSim:
         # from the engine-agnostic accounting epilogue so both tick engines
         # feed it identical arrays
         self.serving = None
+        # optional observability plane (repro.obs) on the same epilogue
+        # seam, and an opt-in wall-clock phase profiler — both None checks,
+        # zero cost when disabled
+        self.obs = None
+        self.phases = None
         # step-loop state (the control plane drives ticks one at a time)
         self._job_i = 0
         self._next_sched = 0.0
@@ -385,6 +390,22 @@ class ClusterSim:
         — after the core arrays exist, before the tick closes — so request
         accounting sees exactly what the results accounting sees."""
         self.serving = plane
+
+    def attach_obs(self, plane) -> None:
+        """Attach a :class:`repro.obs.ObsPlane` (anything with
+        ``on_tick(sim, inp, core)``).  Runs at the very end of
+        :meth:`_account`, so rollups see the tick's final counter state.
+        It must consume only the engine-agnostic per-tick arrays — the
+        ``core`` dict carries post-tick ``has_job``/``mstate`` snapshots
+        both engines export for exactly this purpose (live monitor/fleet
+        state holds *block-end* values during xla block replay)."""
+        self.obs = plane
+
+    def attach_phases(self, profiler) -> None:
+        """Attach a :class:`repro.obs.PhaseProfiler`.  Wall-clock only:
+        its numbers are quarantined from every deterministic artifact
+        (they surface in BENCH_sim.json and on stderr, never in reports)."""
+        self.phases = profiler
 
     @staticmethod
     def _scale_mem(profile, hbm_gb: float):
@@ -581,11 +602,21 @@ class ClusterSim:
             [on["gpu_util"][free], on["sm_activity"][free],
              on["sm_occupancy"][free], on["exec_time_ms"][free] / 1000.0],
             axis=1).astype(np.float32)
-        values, col_group = build_weight_grid_arrays(
-            self._gpu_type_arr[free], on_feats, shares, jobs,
-            self.predictor, sched_cfg)
-        pairs = solve_matching(values, col_group, sched_cfg, row_ids=free,
-                               matcher=self._matcher)
+        ph = self.phases
+        if ph is None:
+            values, col_group = build_weight_grid_arrays(
+                self._gpu_type_arr[free], on_feats, shares, jobs,
+                self.predictor, sched_cfg)
+            pairs = solve_matching(values, col_group, sched_cfg,
+                                   row_ids=free, matcher=self._matcher)
+        else:
+            with ph.phase("predict"):
+                values, col_group = build_weight_grid_arrays(
+                    self._gpu_type_arr[free], on_feats, shares, jobs,
+                    self.predictor, sched_cfg)
+            with ph.phase("match"):
+                pairs = solve_matching(values, col_group, sched_cfg,
+                                       row_ids=free, matcher=self._matcher)
         by_job = {sp.job_id: sp for sp in self.pending}
         assigned: set[int] = set()
         for i, j in pairs:
@@ -743,12 +774,16 @@ class ClusterSim:
         evict_ev = self.monitor.update(level, t, active=act)
         evict_cand = evict_ev & has_job
         s.has_job = has_job & ~evict_cand
+        # has_job/mstate: post-tick snapshots for the obs rollups — part of
+        # the cross-engine core contract (the xla engine exports its
+        # per-tick scan copies; live state would hold block-end values)
         return dict(new_fail=new_fail, err=err, kind_idx=kind_idx, fin=fin,
                     evict_cand=evict_cand, busy=busy, act=act,
                     slowdown=slowdown, tput=tput, tele_util=tele_util,
                     tele_sm=tele_sm, tele_clock=tele_clock, tele_mem=tele_mem,
                     level=level, progress=s.progress, wall=s.wall,
-                    checkpoint=s.checkpoint, outage_until=s.outage_until)
+                    checkpoint=s.checkpoint, outage_until=s.outage_until,
+                    has_job=s.has_job, mstate=self.monitor.state)
 
     def _account(self, inp: dict, core: dict) -> None:
         """The engine-agnostic tick epilogue: sparse event bookkeeping
@@ -809,7 +844,11 @@ class ClusterSim:
         tput_sum = float(tput[busy].sum())
         outage = core["outage_until"] > t
         if self.serving is not None:
-            self.serving.on_tick(t, slowdown, act, outage)
+            if self.phases is None:
+                self.serving.on_tick(t, slowdown, act, outage)
+            else:
+                with self.phases.phase("serving"):
+                    self.serving.on_tick(t, slowdown, act, outage)
         lat = self.base_latency * slowdown * np.where(outage, 10.0, 1.0)
         lat_a, qps_a = lat[act], inp["qps"][act]
         self._lat_sum += float((lat_a * qps_a).sum())
@@ -844,14 +883,27 @@ class ClusterSim:
                 float(slowdown[act].sum()) / max(slow_n, 1))
             self._timeline["tput"].append(
                 tput_sum / max(tput_n, 1) if tput_n else 0.0)
+        if self.obs is not None:
+            self.obs.on_tick(self, inp, core)
 
     def _tick(self, t: float) -> None:
-        inp = self._tick_inputs(t)
-        if self.cfg.engine == "xla":
-            core = self._xla_engine().tick(inp)
-        else:
-            core = self._dense_core_numpy(inp)
-        self._account(inp, core)
+        ph = self.phases
+        if ph is None:
+            inp = self._tick_inputs(t)
+            if self.cfg.engine == "xla":
+                core = self._xla_engine().tick(inp)
+            else:
+                core = self._dense_core_numpy(inp)
+            self._account(inp, core)
+            return
+        with ph.phase("inputs"):
+            inp = self._tick_inputs(t)
+        with ph.phase("dense_core"):
+            core = (self._xla_engine().tick(inp)
+                    if self.cfg.engine == "xla"
+                    else self._dense_core_numpy(inp))
+        with ph.phase("account", exclude=("serving",)):
+            self._account(inp, core)
 
     def _tick_block(self, ts: list[float]) -> None:
         """A scheduling-free run of consecutive ticks.  The xla engine scans
@@ -862,9 +914,19 @@ class ClusterSim:
             for t in ts:
                 self._tick(t)
             return
-        inps = [self._tick_inputs(t) for t in ts]
-        for inp, core in zip(inps, self._xla_engine().tick_block(inps)):
-            self._account(inp, core)
+        ph = self.phases
+        if ph is None:
+            inps = [self._tick_inputs(t) for t in ts]
+            for inp, core in zip(inps, self._xla_engine().tick_block(inps)):
+                self._account(inp, core)
+            return
+        with ph.phase("inputs"):
+            inps = [self._tick_inputs(t) for t in ts]
+        with ph.phase("dense_core"):
+            cores = self._xla_engine().tick_block(inps)
+        with ph.phase("account", exclude=("serving",)):
+            for inp, core in zip(inps, cores):
+                self._account(inp, core)
 
     def _xla_engine(self):
         if self._xla is None:

@@ -1,0 +1,28 @@
+"""Deterministic observability: metrics, traces, phase profiling, exporters.
+
+See the submodule docstrings for the contracts; the short version:
+
+* every artifact (metrics JSONL, trace JSONL, Prometheus text) is
+  byte-identical across same-seed runs, across processes, and across the
+  numpy/xla tick engines — sim time only, canonical JSON, sorted keys;
+* emission streams per window/row, so fleet-scale runs stay O(window) in
+  memory;
+* wall-clock phase profiling is quarantined to stderr + BENCH_sim.json.
+"""
+from repro.obs.export import (JsonlWriter, canonical_json, lint_prometheus,
+                              prometheus_text)
+from repro.obs.metrics import (METRICS_SCHEMA, FleetMetricsRecorder,
+                               MetricsRegistry)
+from repro.obs.phases import PHASES, PhaseProfiler
+from repro.obs.plane import OBS_SCHEMA, ObsConfig, ObsPlane
+from repro.obs.trace import (TRACE_SCHEMA, EventBusTracer, RequestTracer,
+                             TraceWriter)
+
+__all__ = [
+    "OBS_SCHEMA", "METRICS_SCHEMA", "TRACE_SCHEMA", "PHASES",
+    "ObsConfig", "ObsPlane",
+    "MetricsRegistry", "FleetMetricsRecorder",
+    "TraceWriter", "EventBusTracer", "RequestTracer",
+    "PhaseProfiler",
+    "JsonlWriter", "canonical_json", "prometheus_text", "lint_prometheus",
+]

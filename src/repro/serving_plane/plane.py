@@ -110,6 +110,9 @@ class _Lane:
         self.peak_queue = 0
         self.cap_sum = 0.0
         self.ticks = 0
+        # optional request tracer (repro.obs.RequestTracer) + batch ids
+        self.tracer = None
+        self._batch_seq = 0
 
     # ------------------------------------------------------------- per-tick
     def step(self, t: float, dt: float, capacity_rps: float,
@@ -146,6 +149,8 @@ class _Lane:
             if sheds.any():
                 for c, k in zip(list(self.queue), sheds):
                     c[1] -= int(k)
+                    if self.tracer is not None and k:
+                        self.tracer.shed(self.service, t, c[0], int(k))
                 self.shed += int(sheds.sum())
                 while self.queue and self.queue[0][1] == 0:
                     self.queue.popleft()
@@ -165,6 +170,11 @@ class _Lane:
             wait_s = max(finish, t_arr) - t_arr
             lat_ms = wait_s * 1e3 + service_ms
             self._record(lat_ms, n_fit)
+            if self.tracer is not None:
+                self._batch_seq += 1
+                self.tracer.batch(self.service, self._batch_seq, t, t_arr,
+                                  n_fit, work, wait_s * 1e3, service_ms,
+                                  lat_ms)
             cum += n_fit * work
             budget -= n_fit * work
             if n_fit == n:
@@ -293,6 +303,14 @@ class ServingPlane:
         times = philly_request_times(_rng([seed, si, 7]), rate=rate,
                                      horizon_s=horizon_s)
         return ArrivalProcess.trace_replay(times)
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.RequestTracer` to every lane: one
+        ``request_batch`` row per continuous-batching drain, one
+        ``request_shed`` row per admission shed, in deterministic
+        lane/tick order."""
+        for lane in self.lanes:
+            lane.tracer = tracer
 
     # ------------------------------------------------------------- per-tick
     def on_tick(self, t: float, slowdown: np.ndarray, act: np.ndarray,

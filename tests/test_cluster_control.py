@@ -88,6 +88,23 @@ def test_lifecycle_legal_under_fault_pressure(predictor):
     assert cp.results.n_jobs == s["n_jobs"]
 
 
+def test_event_bus_summary_exposes_dropped_event_count():
+    bus = EventBus(keep_log=True, log_cap=3)
+    for i in range(5):
+        bus.emit(float(i), EventKind.SCHEDULE, data=(("round", i),))
+    s = bus.summary()
+    assert s["log_dropped"] == 2 and len(bus.log) == 3
+    # digest/counts cover the FULL stream — only retention truncates
+    assert s["n_events"] == 5 and s["counts"] == {"schedule": 5}
+    full = EventBus(keep_log=True)
+    for i in range(5):
+        full.emit(float(i), EventKind.SCHEDULE, data=(("round", i),))
+    assert full.summary()["log_dropped"] == 0
+    assert full.digest() == s["digest"]
+    # without keep_log nothing is retained, so nothing is "dropped"
+    assert EventBus().summary()["log_dropped"] == 0
+
+
 def test_job_manager_rejects_illegal_transitions():
     bus = EventBus()
     jm = JobManager(bus, strict=True)

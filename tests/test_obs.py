@@ -1,0 +1,265 @@
+"""Observability plane tests: registry contracts, canonical exporters,
+end-to-end byte-identity (same seed, across processes' worth of runs, and
+across tick engines), report neutrality when obs is enabled, and the
+phase profiler's exclusion arithmetic."""
+import hashlib
+import json
+
+import pytest
+
+from repro.cluster.control import run_scenario
+from repro.cluster.run import check_schema
+from repro.obs import (METRICS_SCHEMA, OBS_SCHEMA, TRACE_SCHEMA, JsonlWriter,
+                       MetricsRegistry, ObsConfig, PhaseProfiler,
+                       canonical_json, lint_prometheus, prometheus_text)
+from repro.obs.export import rfloat
+
+TINY = dict(n_devices=24, hours=0.5, seed=0)
+
+
+def _obs(tmp_path, tag="", **kw):
+    return ObsConfig(metrics_out=str(tmp_path / f"metrics{tag}.jsonl"),
+                     trace_out=str(tmp_path / f"trace{tag}.jsonl"),
+                     prom_out=str(tmp_path / f"metrics{tag}.prom"), **kw)
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_counter_gauge_histogram_basics():
+    r = MetricsRegistry()
+    c = r.counter("jobs_total", "jobs", labels=("pool",))
+    c.labels(pool="a100").inc()
+    c.labels(pool="a100").inc(2.0)
+    c.labels(pool="t4").inc()
+    assert c.labels(pool="a100").value == 3.0
+    g = r.gauge("depth")
+    g.set(7.5)
+    assert g._solo().value == 7.5
+    h = r.histogram("lat", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 99.0):
+        h.observe(v)
+    solo = h._solo()
+    assert solo.count == 3 and solo.bucket_counts == [1, 1]
+    assert solo.sum == pytest.approx(101.0)
+    assert r.n_series == 4
+
+
+def test_registry_rejects_bad_names_and_kind_drift():
+    r = MetricsRegistry()
+    with pytest.raises(ValueError):
+        r.counter("bad name")
+    with pytest.raises(ValueError):
+        r.counter("ok", labels=("bad-label",))
+    r.counter("x_total")
+    with pytest.raises(ValueError):
+        r.gauge("x_total")                       # kind drift
+    with pytest.raises(ValueError):
+        r.counter("x_total", labels=("pool",))   # label drift
+    assert r.counter("x_total") is r.counter("x_total")  # re-register OK
+
+
+def test_counter_rejects_negative_and_labels_must_match():
+    r = MetricsRegistry()
+    c = r.counter("n_total", labels=("pool",))
+    with pytest.raises(ValueError):
+        c.labels(pool="x").inc(-1.0)
+    with pytest.raises(ValueError):
+        c.labels(wrong="x")
+    with pytest.raises(ValueError):
+        r.histogram("h", buckets=(2.0, 1.0))     # unsorted buckets
+
+
+# ------------------------------------------------------------- canonical JSON
+def test_canonical_json_sorted_rounded_and_rejects_nonfinite():
+    line = canonical_json({"b": 1.0 / 3.0, "a": 1, "c": [True, -0.0]})
+    assert line == '{"a":1,"b":0.333333333,"c":[true,0.0]}'
+    with pytest.raises(ValueError):
+        canonical_json({"x": float("nan")})
+    with pytest.raises(ValueError):
+        canonical_json({"x": float("inf")})
+
+
+def test_rfloat_matches_canon_and_flat_writes_match_slow_path(tmp_path):
+    # the write_flat fast path must produce the same bytes as write()
+    row = {"t": 1.23456789012345, "n": 3, "s": "x", "none": None,
+           "neg": -0.0, "data": {"a": 2.0 / 3.0}}
+    pre = {k: (rfloat(v) if not isinstance(v, dict)
+               else {kk: rfloat(vv) for kk, vv in v.items()})
+           for k, v in row.items()}
+    w1, w2 = JsonlWriter(str(tmp_path / "a")), JsonlWriter(str(tmp_path / "b"))
+    w1.write(row)
+    w2.write_flat(pre)
+    w1.close(), w2.close()
+    assert (tmp_path / "a").read_bytes() == (tmp_path / "b").read_bytes()
+    assert w1.digest() == w2.digest()
+
+
+def test_jsonl_writer_digest_matches_file_bytes(tmp_path):
+    p = tmp_path / "rows.jsonl"
+    w = JsonlWriter(str(p))
+    for i in range(5):
+        w.write({"i": i, "v": i * 0.1})
+    w.close()
+    assert w.rows == 5
+    assert w.digest() == hashlib.sha256(p.read_bytes()).hexdigest()
+    sink = JsonlWriter(None)                     # digest-only sink
+    sink.write({"i": 0, "v": 0.0})
+    assert sink.rows == 1 and len(sink.digest()) == 64
+
+
+# ------------------------------------------------------------- prometheus
+def test_prometheus_text_renders_and_lints_clean():
+    r = MetricsRegistry()
+    r.counter("jobs_total", "jobs run", labels=("pool",)).labels(
+        pool="a100").inc(3)
+    r.gauge("util", "gpu util").set(0.5)
+    h = r.histogram("slow", "slowdown", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 9.0):
+        h.observe(v)
+    text = prometheus_text(r)
+    assert '# TYPE jobs_total counter' in text
+    assert 'jobs_total{pool="a100"} 3.0' in text
+    assert 'slow_bucket{le="+Inf"} 3' in text
+    assert lint_prometheus(text) == []
+
+
+def test_prometheus_lint_catches_breakage():
+    assert lint_prometheus("no_type_metric 1.0\n")
+    assert lint_prometheus("# TYPE x gauge\nx nope\n")
+    assert lint_prometheus("# TYPE x wrongkind\n")
+    broken_hist = ("# TYPE h histogram\n"
+                   'h_bucket{le="1.0"} 5\nh_bucket{le="2.0"} 3\n'
+                   'h_bucket{le="+Inf"} 5\nh_sum 1.0\nh_count 5\n')
+    assert any("non-monotonic" in p for p in lint_prometheus(broken_hist))
+    no_inf = "# TYPE h histogram\nh_sum 1.0\nh_count 5\n"
+    assert any("+Inf" in p for p in lint_prometheus(no_inf))
+
+
+# ------------------------------------------------------------- end to end
+@pytest.fixture(scope="module")
+def obs_run(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("obs")
+    rep = run_scenario("smoke", obs=_obs(tmp), **TINY)
+    return tmp, rep
+
+
+def test_same_seed_byte_identical_exports(obs_run, tmp_path):
+    tmp1, rep1 = obs_run
+    rep2 = run_scenario("smoke", obs=_obs(tmp_path), **TINY)
+    for name in ("metrics.jsonl", "trace.jsonl", "metrics.prom"):
+        assert (tmp1 / name).read_bytes() == (tmp_path / name).read_bytes()
+    assert json.dumps(rep1, sort_keys=True) == json.dumps(rep2,
+                                                          sort_keys=True)
+
+
+def test_exports_byte_identical_across_engines(tmp_path):
+    run_scenario("smoke", obs=_obs(tmp_path, "_np"), engine="numpy", **TINY)
+    run_scenario("smoke", obs=_obs(tmp_path, "_xla"), engine="xla", **TINY)
+    for name in ("metrics", "trace"):
+        a = (tmp_path / f"{name}_np.jsonl").read_bytes()
+        b = (tmp_path / f"{name}_xla.jsonl").read_bytes()
+        assert a == b, f"{name} diverged across engines"
+    assert ((tmp_path / "metrics_np.prom").read_bytes()
+            == (tmp_path / "metrics_xla.prom").read_bytes())
+
+
+def test_obs_summary_digests_match_files_and_schema_v3(obs_run):
+    tmp, rep = obs_run
+    assert check_schema(rep) == []
+    obs = rep["obs"]
+    assert obs["schema"] == OBS_SCHEMA
+    assert obs["metrics"]["schema"] == METRICS_SCHEMA
+    assert obs["trace"]["schema"] == TRACE_SCHEMA
+    for section, name in (("metrics", "metrics.jsonl"),
+                          ("trace", "trace.jsonl")):
+        digest = hashlib.sha256((tmp / name).read_bytes()).hexdigest()
+        assert obs[section]["digest"] == digest
+    prom_digest = hashlib.sha256(
+        (tmp / "metrics.prom").read_bytes()).hexdigest()
+    assert obs["metrics"]["prom_digest"] == prom_digest
+    assert lint_prometheus((tmp / "metrics.prom").read_text()) == []
+
+
+def test_obs_is_neutral_to_the_report(obs_run):
+    _, rep_on = obs_run
+    rep_off = run_scenario("smoke", **TINY)
+    on = {k: v for k, v in rep_on.items() if k != "obs"}
+    off = {k: v for k, v in rep_off.items() if k != "obs"}
+    assert json.dumps(on, sort_keys=True) == json.dumps(off, sort_keys=True)
+    assert rep_off["obs"] is None
+
+
+def test_metrics_rows_content(obs_run):
+    tmp, rep = obs_run
+    rows = [json.loads(line) for line in
+            (tmp / "metrics.jsonl").read_text().splitlines()]
+    header, samples = rows[0], rows[1:]
+    assert header["kind"] == "header"
+    assert header["schema"] == METRICS_SCHEMA
+    assert header["n_devices"] == TINY["n_devices"]
+    assert samples and all(r["kind"] == "sample" for r in samples)
+    fracs = [r for r in samples if r["name"].endswith("_frac")]
+    assert fracs and all(0.0 <= r["value"] <= 1.0 for r in fracs)
+    hist = [r for r in samples if r["name"] == "tick_online_slowdown"]
+    assert hist and all(r["count"] == sum(r["buckets"]) or
+                        r["count"] >= sum(r["buckets"]) for r in hist)
+    assert rep["obs"]["metrics"]["windows"] >= 1
+    # counters are run-cumulative: the last window's total is the run total
+    # (every placement segment emits one job_start)
+    started = [r for r in samples if r["name"] == "jobs_started_total"]
+    assert started[-1]["value"] == rep["jobs"]["total_placements"]
+
+
+def test_trace_rows_content(obs_run):
+    tmp, rep = obs_run
+    rows = [json.loads(line) for line in
+            (tmp / "trace.jsonl").read_text().splitlines()]
+    assert rows[0] == {"kind": "header", "schema": TRACE_SCHEMA}
+    spans = [r for r in rows if r["kind"] == "job_span"]
+    for s in spans:
+        assert s["end"] in ("finish", "evict", "open")
+        if s["queue_wait_s"] is not None:
+            assert s["queue_wait_s"] >= 0.0
+        if s["end"] == "finish":
+            assert s["t_end"] >= s["t_start"]
+    kinds = rep["obs"]["trace"]["kinds"]
+    assert sum(kinds.values()) + 1 == rep["obs"]["trace"]["rows"]  # + header
+
+
+def test_metrics_every_changes_window_count(tmp_path):
+    obs_fast = ObsConfig(metrics_out=str(tmp_path / "fast.jsonl"),
+                         metrics_every_s=60.0)
+    obs_slow = ObsConfig(metrics_out=str(tmp_path / "slow.jsonl"),
+                         metrics_every_s=1800.0)
+    r_fast = run_scenario("smoke", obs=obs_fast, **TINY)
+    r_slow = run_scenario("smoke", obs=obs_slow, **TINY)
+    assert (r_fast["obs"]["metrics"]["windows"]
+            > r_slow["obs"]["metrics"]["windows"])
+
+
+# --------------------------------------------------------------- profiler
+def test_phase_profiler_excludes_nested_phase():
+    clock = iter(range(100))
+    prof = PhaseProfiler(clock=lambda: float(next(clock)))
+    with prof.phase("account", exclude=("serving",)):   # enters at 0
+        with prof.phase("serving"):                     # 1 .. 2  (1s)
+            pass
+    # account exits at 3: saw 3s wall minus the 1s of nested serving = 2s
+    s = prof.summary()
+    assert s["phases"]["serving"]["wall_s"] == pytest.approx(1.0)
+    assert s["phases"]["account"]["wall_s"] == pytest.approx(2.0)
+    assert s["phases"]["account"]["calls"] == 1
+    assert s["total_s"] == pytest.approx(3.0)
+    assert "account" in prof.format_table()
+
+
+def test_profile_phases_never_lands_in_report(tmp_path, capsys):
+    obs = ObsConfig(metrics_out=str(tmp_path / "m.jsonl"),
+                    profile_phases=True)
+    rep = run_scenario("smoke", obs=obs, **TINY)
+    assert rep["obs"]["profile_phases"] is True
+    blob = json.dumps(rep)
+    assert "wall_s" not in blob     # phase walls quarantined from artifacts
+    rep_off = run_scenario("smoke", **TINY)
+    on = {k: v for k, v in rep.items() if k != "obs"}
+    off = {k: v for k, v in rep_off.items() if k != "obs"}
+    assert json.dumps(on, sort_keys=True) == json.dumps(off, sort_keys=True)

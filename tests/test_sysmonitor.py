@@ -134,3 +134,52 @@ def test_vector_monitor_matches_scalar_fleet():
             assert bool(evict_vec[i]) == ("evict" in events), (k, i)
         assert all(bool(vec.schedulable[i]) == scalars[i].schedulable
                    for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# VectorSysMonitor edges: ring-buffer wraparound, disable vs transitions
+# ---------------------------------------------------------------------------
+import numpy as np
+
+from repro.core.sysmonitor import (S_DISABLED, S_HEALTHY, S_OVERLIMIT,
+                                   S_UNHEALTHY, VectorSysMonitor)
+
+
+def test_wait_periods_at_ring_wraparound():
+    m = VectorSysMonitor(1, ring=4)
+    dev = np.array([0])
+    for t in (0.0, 100.0, 200.0, 300.0, 400.0, 500.0):   # 6 pushes, ring=4
+        m.push_overlimit(dev, t)
+    # only the retained 4 entries (200..500) count: e = 4-1 -> 60 * 2**3
+    assert m.wait_periods(dev, 600.0)[0] == 480.0
+    # the two overwritten entries (0, 100) must NOT resurface once the
+    # window slides past the retained ones
+    assert m.wait_periods(dev, 7500.0)[0] == 240.0       # 300,400,500 left
+    assert m.wait_periods(dev, 7800.0)[0] == 60.0        # window empty
+
+
+def test_wait_periods_honours_readmit_cap():
+    m = VectorSysMonitor(1, ring=16)
+    dev = np.array([0])
+    for _ in range(8):                                    # e=7 -> 7680 s raw
+        m.push_overlimit(dev, 1000.0)
+    assert m.wait_periods(dev, 1000.0)[0] == m.cfg.readmit_cap_s
+
+
+def test_disable_vs_schedulable_under_concurrent_transitions():
+    m = VectorSysMonitor(4)
+    lvl0 = np.zeros(4, np.int8)
+    m.update(lvl0, 10.0)                                  # INIT -> HEALTHY
+    assert (m.state == S_HEALTHY).all()
+    m.disable(np.array([1]))
+    assert m.schedulable.tolist() == [True, False, True, True]
+    # one tick where every non-disabled device transitions at once
+    evict = m.update(np.array([2, 2, 1, 0], np.int8), 20.0)
+    assert evict.tolist() == [True, False, False, False]  # disabled: no evict
+    assert m.state.tolist() == [S_OVERLIMIT, S_DISABLED, S_UNHEALTHY,
+                                S_HEALTHY]
+    assert m.schedulable.tolist() == [False, False, False, True]
+    # disabled is terminal: healthy levels never resurrect device 1
+    m.update(lvl0, 30.0)
+    assert m.state[1] == S_DISABLED and not m.schedulable[1]
+    assert m.state[2] == S_HEALTHY                        # others recover

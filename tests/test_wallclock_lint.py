@@ -1,0 +1,92 @@
+"""Wall-clock-leak lint: deterministic artifact producers must emit the same
+bytes no matter what the wall clock says.
+
+Strategy: poison ``time.time`` / ``time.perf_counter`` / ``time.monotonic``
+with deterministic fake clocks started at two wildly different bases and
+advancing by a large stride per call, then produce each artifact under both
+clocks and require byte equality.  Any wall-clock value that leaks into an
+artifact changes the bytes and fails the test.
+
+Audit notes (producers deliberately *outside* this lint):
+
+* ``cli.py`` / ``benchmarks`` time wall for stderr notes and the
+  BENCH_sim.json perf artifact — wall is their payload, never part of a
+  deterministic artifact.
+* ``launch/dryrun.py`` reports carry ``lower_s`` / ``compile_s`` by design:
+  they are compile-timing artifacts, explicitly outside the byte-identity
+  discipline (their own docs say so).
+* ``launch/serve.py`` / ``launch/train.py`` are interactive demos, not
+  artifact producers.
+* ``runtime/fault_tolerance.py`` uses ``time.monotonic`` only as a default
+  when no logical ``now`` is injected; the sim paths always inject.
+* ``obs/phases.py`` is the one *intentional* wall-clock consumer in the
+  obs plane — quarantined to stderr + BENCH_sim.json
+  (``test_obs.test_profile_phases_never_lands_in_report`` pins that).
+"""
+import json
+import time
+
+import pytest
+
+from repro.cluster.control import run_scenario
+from repro.obs import ObsConfig
+
+TINY = dict(n_devices=24, hours=0.5, seed=0)
+
+
+def _poison_clock(monkeypatch, base: float):
+    state = {"t": base}
+
+    def fake_clock():
+        state["t"] += 977.0       # big stride: any leak moves the bytes
+        return state["t"]
+
+    monkeypatch.setattr(time, "time", fake_clock)
+    monkeypatch.setattr(time, "perf_counter", fake_clock)
+    monkeypatch.setattr(time, "monotonic", fake_clock)
+
+
+def _scenario_artifacts(tmp_path, tag):
+    obs = ObsConfig(metrics_out=str(tmp_path / f"m{tag}.jsonl"),
+                    trace_out=str(tmp_path / f"t{tag}.jsonl"),
+                    prom_out=str(tmp_path / f"p{tag}.prom"))
+    rep = run_scenario("smoke", obs=obs, **TINY)
+    return (json.dumps(rep, sort_keys=True).encode(),
+            (tmp_path / f"m{tag}.jsonl").read_bytes(),
+            (tmp_path / f"t{tag}.jsonl").read_bytes(),
+            (tmp_path / f"p{tag}.prom").read_bytes())
+
+
+def test_scenario_report_and_obs_exports_ignore_wall_clock(
+        tmp_path, monkeypatch):
+    _poison_clock(monkeypatch, base=0.0)
+    a = _scenario_artifacts(tmp_path, "a")
+    _poison_clock(monkeypatch, base=4.0e9)
+    b = _scenario_artifacts(tmp_path, "b")
+    for name, x, y in zip(("report", "metrics", "trace", "prom"), a, b):
+        assert x == y, f"wall clock leaked into {name}"
+
+
+def test_profile_phases_artifacts_stay_clean_under_poisoned_clock(
+        tmp_path, monkeypatch):
+    # phase profiling *consumes* the poisoned clock (that's its job) but
+    # must not let it reach the report or the exports
+    outs = []
+    for tag, base in (("a", 0.0), ("b", 7.7e8)):
+        _poison_clock(monkeypatch, base=base)
+        obs = ObsConfig(metrics_out=str(tmp_path / f"m{tag}.jsonl"),
+                        profile_phases=True)
+        rep = run_scenario("smoke", obs=obs, **TINY)
+        outs.append((json.dumps(rep, sort_keys=True).encode(),
+                     (tmp_path / f"m{tag}.jsonl").read_bytes()))
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.slow
+def test_speed_matrix_artifact_ignores_wall_clock(monkeypatch):
+    from repro.profiling.harness import build_speed_matrix
+    blobs = []
+    for base in (0.0, 3.3e9):
+        _poison_clock(monkeypatch, base=base)
+        blobs.append(build_speed_matrix("smoke", seed=0).to_json().encode())
+    assert blobs[0] == blobs[1], "wall clock leaked into speed matrix"
