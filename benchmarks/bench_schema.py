@@ -25,6 +25,7 @@ _SUITE_KEYS = {
     "overhead_matching": ("steady_state", "km_scaling", "phases"),
     "kernel_bench": ("cells", "phases"),
     "obs_overhead": ("cells", "overhead", "tick_phases", "phases"),
+    "durability_overhead": ("append", "snapshot", "recovery", "phases"),
 }
 
 

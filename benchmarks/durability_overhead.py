@@ -1,0 +1,165 @@
+"""Durability overhead: WAL append throughput, snapshot cost, replay speed.
+
+The durable control plane must be cheap enough to leave on: the WAL sink
+rides every ``EventBus.emit`` and snapshots ride tick boundaries.  This
+suite measures the three costs that matter:
+
+* **append** — raw event-store throughput (events/s) for both backends,
+  synthetic events in a temp directory, fsync'd once at the end (the same
+  discipline the runner uses: buffered appends, fsync at snapshots).
+* **snapshot** — capture + pickle latency and snapshot size for a
+  full-featured control plane at end-of-run state, plus the restore cost.
+* **recovery** — the headline walls: the same scenario plain vs durable
+  (sink + snapshots + manifests on), and replay (resume from the earliest
+  retained snapshot) vs the live run it reconstructs.
+
+  PYTHONPATH=src python benchmarks/durability_overhead.py          # full
+  PYTHONPATH=src python benchmarks/durability_overhead.py --smoke  # CI shape
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import pickle
+import re
+import sys
+import tempfile
+import time
+
+
+def _scenario(smoke: bool):
+    from repro.cluster.scenario import Scenario
+    if smoke:
+        return Scenario(name="durability-bench", policy="time-sharing",
+                        n_devices=128, hours=2.0, seed=0, trace="C")
+    return Scenario(name="durability-bench", policy="time-sharing",
+                    n_devices=2000, hours=6.0, seed=0, trace="C")
+
+
+def _events(n: int):
+    from repro.cluster.events import Event, EventKind
+    kinds = list(EventKind)
+    return [Event(seq=i, t=30.0 * i, kind=kinds[i % len(kinds)],
+                  device=i % 512, job=i % 64,
+                  data=(("w", 0.25 * (i % 17)), ("n", i)))
+            for i in range(n)]
+
+
+def _bench_append(n: int) -> dict:
+    from repro.durability import open_store
+    evs = _events(n)
+    out = {}
+    for backend in ("jsonl", "sqlite"):
+        with tempfile.TemporaryDirectory(prefix="durab_append_") as tmp:
+            store = open_store(os.path.join(tmp, "ev"), backend,
+                               segment_events=50_000)
+            t0 = time.perf_counter()
+            for ev in evs:
+                store.append(ev)
+            store.flush(fsync=True)
+            wall = time.perf_counter() - t0
+            store.close()
+        out[backend] = {"n_events": n, "wall_s": wall,
+                        "events_per_s": n / max(wall, 1e-9)}
+    return out
+
+
+def _bench_snapshot(cp, store, horizon_s: float, n_ticks: int) -> dict:
+    from repro.cluster.control import ControlPlane
+    from repro.durability import capture_control, restore_control
+    t0 = time.perf_counter()
+    snap = capture_control(cp, horizon_s, n_ticks)
+    capture_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    blob = pickle.dumps(snap)
+    pickle_s = time.perf_counter() - t0
+    fresh = ControlPlane(cp.scenario)
+    t0 = time.perf_counter()
+    restore_control(fresh, pickle.loads(blob), store=store)
+    restore_s = time.perf_counter() - t0
+    return {"capture_s": capture_s, "pickle_s": pickle_s,
+            "restore_s": restore_s, "bytes": len(blob)}
+
+
+def run_json(smoke: bool = False) -> dict:
+    from repro.cluster.control import ControlPlane
+    from repro.durability import DurableRun, resume_run
+    sc = _scenario(smoke)
+    n_append = 20_000 if smoke else 200_000
+    append = _bench_append(n_append)
+
+    # plain run (no durability) — the baseline wall
+    cp = ControlPlane(sc)
+    t0 = time.perf_counter()
+    cp.run()
+    plain_wall = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory(prefix="durab_bench_") as tmp:
+        rundir = os.path.join(tmp, "run")
+        # durable run: WAL sink + snapshots + manifest refreshes all on.
+        # keep every snapshot so replay below can pin the earliest one.
+        run = DurableRun.create(sc, rundir, snapshot_every_s=600.0,
+                                keep_snapshots=10_000)
+        t0 = time.perf_counter()
+        run.execute()
+        durable_wall = time.perf_counter() - t0
+        n_ticks = run._n_ticks()
+        snapshot = _bench_snapshot(run.cp, run.store, sc.horizon_seconds(),
+                                   n_ticks)
+        snaps = sorted(glob.glob(
+            os.path.join(rundir, "snapshots", "snap-*.pkl")))
+        first_tick = int(re.search(r"snap-(\d+)", snaps[0]).group(1))
+        run.store.close()
+        t0 = time.perf_counter()
+        resumed = resume_run(rundir, at_tick=first_tick)
+        replay_wall = time.perf_counter() - t0
+        resumed.store.close()
+        assert resumed.report == run.cp.report()
+
+    recovery = {
+        "plain_wall_s": plain_wall,
+        "durable_wall_s": durable_wall,
+        "durable_ratio": durable_wall / max(plain_wall, 1e-9),
+        "replay_wall_s": replay_wall,
+        "replayed_ticks": n_ticks - first_tick,
+        "n_ticks": n_ticks,
+        "n_events": run.store.count(),
+        "snapshots_taken": run.snapshots_taken,
+    }
+    return {
+        "scenario": {"n_devices": sc.n_devices,
+                     "horizon_s": sc.horizon_seconds(),
+                     "policy": "time-sharing"},
+        "append": append,
+        "snapshot": snapshot,
+        "recovery": recovery,
+        "phases": {"plain_run_s": plain_wall, "durable_run_s": durable_wall,
+                   "replay_s": replay_wall},
+        "headline_walls": {"durable_run": durable_wall,
+                           "replay": replay_wall},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    doc = run_json(smoke=args.smoke)
+    for backend, row in doc["append"].items():
+        print(f"append {backend:7s} {row['events_per_s']:,.0f} events/s "
+              f"({row['n_events']} events in {row['wall_s']:.3f}s)")
+    sn = doc["snapshot"]
+    print(f"snapshot capture {sn['capture_s']*1e3:.1f}ms  pickle "
+          f"{sn['pickle_s']*1e3:.1f}ms  restore {sn['restore_s']*1e3:.1f}ms "
+          f" size {sn['bytes']/1e6:.2f}MB")
+    rec = doc["recovery"]
+    print(f"plain {rec['plain_wall_s']:.2f}s  durable "
+          f"{rec['durable_wall_s']:.2f}s (x{rec['durable_ratio']:.3f})  "
+          f"replay {rec['replay_wall_s']:.2f}s for "
+          f"{rec['replayed_ticks']}/{rec['n_ticks']} ticks")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,6 +64,7 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
     ap.add_argument("--out", default=None, help="write report JSON here "
                     "(default: stdout)")
     _add_obs_flags(ap)
+    _add_durability_flags(ap)
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--list-policies", action="store_true",
@@ -87,17 +88,32 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
         return 0
     if args.check_schema:
         return _check_schema_file(args.check_schema, check_schema)
+    if args.verify_manifest:
+        return _verify_manifest_file(args.verify_manifest)
 
-    sc = scenario_by_name(args.scenario)
     t0 = time.perf_counter()
-    report = run_scenario(
-        sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
-        policy=args.policy, tick_s=args.tick, graceful_exit=args.graceful,
-        engine=args.engine, obs=_obs_config(args))
+    if args.resume:
+        report = _durable_resume(args.resume)
+    else:
+        sc = scenario_by_name(args.scenario)
+        if args.durable:
+            report = _durable_run(
+                sc.with_overrides(
+                    n_devices=args.devices, hours=args.hours,
+                    seed=args.seed, policy=args.policy, tick_s=args.tick,
+                    graceful_exit=args.graceful, engine=args.engine),
+                args)
+        else:
+            report = run_scenario(
+                sc, n_devices=args.devices, hours=args.hours,
+                seed=args.seed, policy=args.policy, tick_s=args.tick,
+                graceful_exit=args.graceful, engine=args.engine,
+                obs=_obs_config(args))
+            _emit_json(report, args.out)
     wall = time.perf_counter() - t0
-    _emit_json(report, args.out)
     s = report["sim"]
-    print(f"[{sc.name}] {s['policy']} n={report['scenario']['n_devices']} "
+    print(f"[{report['scenario']['name']}] {s['policy']} "
+          f"n={report['scenario']['n_devices']} "
           f"{report['scenario']['hours']}h: finished "
           f"{s['n_finished']}/{s['n_jobs']} jobs, slowdown "
           f"{s['avg_slowdown']:.3f}x, errors {s['errors_propagated']}"
@@ -145,30 +161,46 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--out", default=None, help="write report JSON here "
                     "(default: stdout)")
     _add_obs_flags(ap)
+    _add_durability_flags(ap)
     ap.add_argument("--check-schema", metavar="REPORT.json", default=None,
                     help="validate an existing report file and exit")
     args = ap.parse_args(argv)
 
     if args.check_schema:
         return _check_schema_file(args.check_schema, check_schema)
+    if args.verify_manifest:
+        return _verify_manifest_file(args.verify_manifest)
 
-    sc = scenario_by_name(args.scenario)
-    serving = sc.serving if sc.serving is not None else ServingConfig()
-    overrides = {k: v for k, v in (
-        ("arrivals", args.arrivals), ("load", args.load),
-        ("admission", args.admission),
-        ("request_size_sigma", args.request_size_sigma)) if v is not None}
-    if overrides:
-        serving = dataclasses.replace(serving, **overrides)
     t0 = time.perf_counter()
-    report = run_scenario(
-        sc, n_devices=args.devices, hours=args.hours, seed=args.seed,
-        engine=args.engine, serving=serving, obs=_obs_config(args))
+    if args.resume:
+        report = _durable_resume(args.resume)
+    else:
+        sc = scenario_by_name(args.scenario)
+        serving = sc.serving if sc.serving is not None else ServingConfig()
+        overrides = {k: v for k, v in (
+            ("arrivals", args.arrivals), ("load", args.load),
+            ("admission", args.admission),
+            ("request_size_sigma", args.request_size_sigma))
+            if v is not None}
+        if overrides:
+            serving = dataclasses.replace(serving, **overrides)
+        if args.durable:
+            report = _durable_run(
+                sc.with_overrides(
+                    n_devices=args.devices, hours=args.hours,
+                    seed=args.seed, engine=args.engine, serving=serving),
+                args)
+        else:
+            report = run_scenario(
+                sc, n_devices=args.devices, hours=args.hours,
+                seed=args.seed, engine=args.engine, serving=serving,
+                obs=_obs_config(args))
+            _emit_json(report, args.out)
     wall = time.perf_counter() - t0
-    _emit_json(report, args.out)
     _emit_serving_note(report)
     _emit_obs_note(report)
-    print(f"[{sc.name}] ({wall:.1f}s wall)", file=sys.stderr)
+    print(f"[{report['scenario']['name']}] ({wall:.1f}s wall)",
+          file=sys.stderr)
     return 0
 
 
@@ -288,6 +320,7 @@ BENCH_JSON_SUITES = [
     ("overhead_matching", "benchmarks.overhead_matching"),
     ("kernel_bench", "benchmarks.kernel_bench"),
     ("obs_overhead", "benchmarks.obs_overhead"),
+    ("durability_overhead", "benchmarks.durability_overhead"),
 ]
 
 
@@ -411,6 +444,63 @@ def _emit_serving_note(report: dict) -> None:
     print(f"[serving] total      p50 {tot['p50_ms']:.1f}ms "
           f"p99 {tot['p99_ms']:.1f}ms attain {tot['slo_attainment']:.4f} "
           f"shed {tot['shed']}/{tot['arrived']}", file=sys.stderr)
+
+
+def _add_durability_flags(ap) -> None:
+    g = ap.add_argument_group(
+        "durability (write-ahead event log + snapshots; a resumed run's "
+        "report is byte-identical to an uninterrupted one — see README "
+        "'Durability & recovery')")
+    g.add_argument("--durable", default=None, metavar="RUNDIR",
+                   help="run with a write-ahead event log, periodic "
+                        "snapshots, and a signed manifest in RUNDIR")
+    g.add_argument("--resume", default=None, metavar="RUNDIR",
+                   help="resume a crashed durable run from its newest "
+                        "verified snapshot")
+    g.add_argument("--snapshot-every", type=float, default=1800.0,
+                   metavar="SECONDS",
+                   help="snapshot cadence in sim seconds (default: 1800)")
+    g.add_argument("--store", default="jsonl", choices=("jsonl", "sqlite"),
+                   help="event-log backend (default: jsonl)")
+    g.add_argument("--verify-manifest", default=None,
+                   metavar="MANIFEST.json",
+                   help="verify a run manifest (signature + artifact "
+                        "hashes + WAL chain) and exit")
+
+
+def _durable_run(sc, args) -> dict:
+    from repro.durability import run_durable
+    run = run_durable(sc, args.durable, obs=_obs_config(args), out=args.out,
+                      snapshot_every_s=args.snapshot_every,
+                      backend=args.store)
+    _emit_json(run.report, run.out)
+    run.finalize_manifest()
+    print(f"[durable] {run.rundir}: {run.store.count()} events, "
+          f"{run.snapshots_taken} snapshots, manifest signed",
+          file=sys.stderr)
+    return run.report
+
+
+def _durable_resume(rundir: str) -> dict:
+    from repro.durability import resume_run
+    run = resume_run(rundir)
+    _emit_json(run.report, run.out)
+    run.finalize_manifest()
+    origin = ("tick 0 (no usable snapshot)"
+              if run.resumed_from_tick is None
+              else f"tick {run.resumed_from_tick}")
+    print(f"[durable] resumed {run.rundir} from {origin}: "
+          f"{run.store.count()} events, manifest signed", file=sys.stderr)
+    return run.report
+
+
+def _verify_manifest_file(path: str) -> int:
+    from repro.durability import verify_rundir
+    problems = verify_rundir(path)
+    for p in problems:
+        print(f"MANIFEST: {p}", file=sys.stderr)
+    print("manifest " + ("FAIL" if problems else "OK"), file=sys.stderr)
+    return 1 if problems else 0
 
 
 def _check_schema_file(path: str, checker) -> int:

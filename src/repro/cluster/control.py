@@ -90,8 +90,10 @@ def check_schema(report: dict) -> list[str]:
                     if k not in row:
                         problems.append(f"obs.{section} missing {k!r}")
     events = report.get("events")
-    if isinstance(events, dict) and "log_dropped" not in events:
-        problems.append("events summary missing 'log_dropped'")
+    if isinstance(events, dict):
+        for k in ("log_dropped", "sink_events", "sink_dropped"):
+            if k not in events:
+                problems.append(f"events summary missing {k!r}")
     return problems
 
 
@@ -238,14 +240,22 @@ class ControlPlane:
         self._t_end = 0.0
 
     # ------------------------------------------------------------------ run
-    def run(self):
-        """Drive the full scenario; returns the engine's SimResults (the
-        JSON report comes from :meth:`report`)."""
+    def run(self, *, start_tick: int = 0, start_t: float = 0.0,
+            tick_callback=None):
+        """Drive the scenario from ``start_tick`` (0 = a fresh run; the
+        durability plane resumes from a snapshot's tick boundary with the
+        snapshot's recorded ``start_t``); returns the engine's SimResults
+        (the JSON report comes from :meth:`report`).
+
+        ``tick_callback(ticks_done, t)`` fires after each completed tick —
+        the durable runner's snapshot/WAL-flush seam.  It must not touch
+        sim state (the tick trajectory has to be byte-identical with and
+        without a callback attached)."""
         sc = self.scenario
         sim = self.sim
-        t = 0.0
+        t = start_t
         n_ticks = int(sc.horizon_seconds() / sc.tick_s)
-        for _ in range(n_ticks):
+        for i in range(start_tick, n_ticks):
             self._submit_due(t)
             if self.campaign is not None:
                 self.campaign.inject(t, sc.tick_s)
@@ -255,6 +265,8 @@ class ControlPlane:
             if self.scalers:
                 self._autoscale(t)
             t = sim.step(t)
+            if tick_callback is not None:
+                tick_callback(i + 1, t)
         self._t_end = t
         self.results = sim.finalize(t)
         if self.obs is not None:

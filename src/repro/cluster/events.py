@@ -60,11 +60,22 @@ class EventBus:
         self.counts: dict[str, int] = {}
         self._seq = 0
         self._hash = hashlib.sha256()
+        self._sinks: list[Callable[[Event], None]] = []
+        self.sink_events = 0                  # events delivered to sinks
+        self.sink_dropped = 0                 # contractually always 0
 
     def subscribe(self, fn: Callable[[Event], None],
                   kind: EventKind | None = None) -> None:
         """Subscribe to one kind, or to everything with ``kind=None``."""
         self._subs.setdefault(kind, []).append(fn)
+
+    def attach_sink(self, fn: Callable[[Event], None]) -> None:
+        """Attach a durable sink: called for EVERY event, before any
+        subscriber, with no cap and no drop path (unlike ``keep_log``,
+        which silently stops retaining past ``log_cap``).  A sink that
+        raises aborts the emit — a write-ahead log must not fall behind
+        the state it protects."""
+        self._sinks.append(fn)
 
     def emit(self, t: float, kind: EventKind, device: int = -1,
              job: int = -1, data: tuple = ()) -> Event:
@@ -72,6 +83,9 @@ class EventBus:
         self._seq += 1
         self.counts[kind.value] = self.counts.get(kind.value, 0) + 1
         self._hash.update(repr(ev.key()).encode())
+        for fn in self._sinks:
+            fn(ev)
+            self.sink_events += 1
         if self.keep_log:
             if len(self.log) < self.log_cap:
                 self.log.append(ev)
@@ -92,9 +106,13 @@ class EventBus:
         return self._hash.hexdigest()
 
     def summary(self) -> dict:
-        """Counts + digest, plus ``log_dropped``: how many events the
-        capped ``log`` silently omitted (``digest``/``counts`` always cover
-        the full stream — only retention truncates)."""
+        """Counts + digest, plus backpressure counters: ``log_dropped`` is
+        how many events the capped ``log`` silently omitted, while
+        ``sink_events``/``sink_dropped`` account for the durable-sink seam
+        (``sink_dropped`` is structurally zero — sinks run before any
+        capping and have no drop path).  ``digest``/``counts`` always
+        cover the full stream — only retention truncates."""
         return {"n_events": self._seq, "counts": dict(sorted(
             self.counts.items())), "digest": self.digest(),
-            "log_dropped": self.dropped}
+            "log_dropped": self.dropped, "sink_events": self.sink_events,
+            "sink_dropped": self.sink_dropped}

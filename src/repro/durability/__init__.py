@@ -1,0 +1,45 @@
+"""Durable, event-sourced control plane: WAL + snapshots + signed manifests.
+
+The determinism substrate (gapless event sequences, SHA-256 stream digests,
+byte-identical numpy/xla reports) makes crash recovery *provable*: persist
+the event stream and periodic state snapshots, and a run killed at an
+arbitrary tick can be resumed to a final report that is byte-identical to
+an uninterrupted same-seed run.
+
+Layout of a durable run directory::
+
+    rundir/
+      run.json              # provenance: scenario, seed, engine, artifact paths
+      scenario.pkl          # the fully-resolved Scenario (resume input)
+      events/
+        segment-000000.jsonl  # append-only WAL segments (or log.sqlite)
+        index.json            # sealed-segment sha256 chain
+      snapshots/
+        snap-0000360.pkl      # tick-boundary state snapshots
+      manifest.json         # artifact sha256s + HMAC signature
+
+Modules:
+
+* :mod:`~repro.durability.store` — ``EventStore`` API with JSONL-segment and
+  sqlite backends; per-segment SHA-256 chain hashes.
+* :mod:`~repro.durability.snapshot` — capture/restore of the mutable state of
+  ClusterSim, ControlPlane, ServingPlane, and the obs plane's mid-stream
+  writers.
+* :mod:`~repro.durability.manifest` — HMAC-SHA256 signed run manifests.
+* :mod:`~repro.durability.runner` — the durable run loop and ``--resume``.
+"""
+from repro.durability.manifest import (sign_manifest, verify_manifest,
+                                       write_manifest)
+from repro.durability.runner import (DurableRun, resume_run, run_durable,
+                                     verify_rundir)
+from repro.durability.snapshot import (capture_sim, restore_sim,
+                                       capture_control, restore_control)
+from repro.durability.store import (JsonlEventStore, SqliteEventStore,
+                                    open_store)
+
+__all__ = [
+    "JsonlEventStore", "SqliteEventStore", "open_store",
+    "capture_sim", "restore_sim", "capture_control", "restore_control",
+    "sign_manifest", "verify_manifest", "write_manifest",
+    "DurableRun", "run_durable", "resume_run", "verify_rundir",
+]

@@ -1,0 +1,82 @@
+"""Signed run manifests: HMAC round-trips, tamper detection, key handling."""
+import json
+import os
+
+import pytest
+
+from repro.durability.manifest import (KEY_ENV, build_manifest, file_sha256,
+                                       sign_manifest, verify_manifest,
+                                       write_manifest)
+
+
+@pytest.fixture
+def rundir(tmp_path):
+    d = tmp_path / "run"
+    d.mkdir()
+    (d / "a.json").write_text('{"x": 1}\n')
+    (d / "sub").mkdir()
+    (d / "sub" / "b.bin").write_bytes(b"\x00\x01\x02")
+    return d
+
+
+def _write(rundir, arts=("a.json", "sub/b.bin")):
+    manifest = build_manifest(
+        str(rundir), [str(rundir / a) for a in arts], {"scenario": "smoke"})
+    path = str(rundir / "manifest.json")
+    write_manifest(path, manifest)
+    return path, manifest
+
+
+class TestManifest:
+    def test_round_trip_ok(self, rundir):
+        path, manifest = _write(rundir)
+        assert verify_manifest(path) == []
+        assert set(manifest["artifacts"]) == {"a.json", "sub/b.bin"}
+        sha, size = file_sha256(str(rundir / "a.json"))
+        assert manifest["artifacts"]["a.json"] == {"sha256": sha,
+                                                   "bytes": size}
+
+    def test_signature_deterministic(self, rundir):
+        _, m1 = _write(rundir)
+        _, m2 = _write(rundir)
+        assert m1["signature"] == m2["signature"]
+
+    def test_tampered_artifact_detected(self, rundir):
+        path, _ = _write(rundir)
+        with open(rundir / "a.json", "a") as f:
+            f.write("tamper")
+        problems = verify_manifest(path)
+        assert any("a.json" in p for p in problems)
+
+    def test_tampered_body_detected(self, rundir):
+        path, _ = _write(rundir)
+        with open(path) as f:
+            doc = json.load(f)
+        doc["run"]["scenario"] = "evil"
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        assert any("signature" in p for p in verify_manifest(path))
+
+    def test_missing_artifact_detected(self, rundir):
+        path, _ = _write(rundir)
+        os.unlink(rundir / "sub" / "b.bin")
+        assert any("b.bin" in p for p in verify_manifest(path))
+
+    def test_signature_only_mode_skips_files(self, rundir):
+        path, _ = _write(rundir)
+        os.unlink(rundir / "sub" / "b.bin")
+        assert verify_manifest(path, check_files=False) == []
+
+    def test_key_env_changes_signature(self, rundir, monkeypatch):
+        _, dev = _write(rundir)
+        monkeypatch.setenv(KEY_ENV, "prod-secret")
+        path, prod = _write(rundir)
+        assert prod["signature"] != dev["signature"]
+        assert verify_manifest(path) == []          # verifies under same env
+        monkeypatch.delenv(KEY_ENV)
+        assert any("signature" in p for p in verify_manifest(path))
+
+    def test_sign_ignores_existing_signature_field(self):
+        body = {"schema": "s", "run": {}, "artifacts": {}}
+        sig = sign_manifest(body)
+        assert sign_manifest({**body, "signature": "junk"}) == sig

@@ -1,0 +1,176 @@
+"""Crash-recovery equivalence: a durable run killed at an arbitrary tick and
+resumed produces a report (and obs artifacts) byte-identical to an
+uninterrupted same-seed run — across WAL backends, tick engines, and crash
+points (property-tested when hypothesis is installed)."""
+import gc
+import json
+import os
+
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.cluster import Scenario
+from repro.cluster.control import ControlPlane
+from repro.cluster.scenario import scenario_by_name
+from repro.durability import DurableRun, resume_run, run_durable
+from repro.obs import ObsConfig
+
+
+def _tiny(**kw):
+    base = dict(name="t", policy="time-sharing", n_devices=32, hours=1.0,
+                seed=3, trace="C")
+    base.update(kw)
+    return Scenario(**base)
+
+
+def _report_bytes(report: dict) -> str:
+    return json.dumps(report, indent=2, sort_keys=True)
+
+
+class _Crash(Exception):
+    pass
+
+
+def _crash_run(sc, rundir, crash_after_ticks, *, snapshot_every_s=300.0,
+               backend="jsonl", obs=None):
+    """An in-process stand-in for SIGKILL: run a durable run, abandon it
+    mid-flight after `crash_after_ticks`, flush stale file handles, and
+    leave the directory exactly as a dead process would (no report, no
+    final manifest).  CI's recovery-smoke job does the real kill -9."""
+    run = DurableRun.create(sc, rundir, obs=obs,
+                            snapshot_every_s=snapshot_every_s,
+                            backend=backend)
+    snap_cb = run._tick_callback()
+
+    def cb(ticks_done, t):
+        snap_cb(ticks_done, t)
+        if ticks_done >= crash_after_ticks:
+            raise _Crash
+    run.store.truncate(0)
+    run.cp = ControlPlane(sc, obs=run.obs)
+    run.cp.bus.attach_sink(run.store.append)
+    with pytest.raises(_Crash):
+        run.cp.run(tick_callback=cb)
+    # drop the dead run's handles so nothing writes behind the resume
+    run.store.close()
+    del run
+    gc.collect()
+
+
+@pytest.mark.parametrize("backend", ["jsonl", "sqlite"])
+def test_crash_resume_byte_identical(tmp_path, backend):
+    sc = _tiny()
+    base = run_durable(sc, str(tmp_path / "base"), backend=backend)
+    _crash_run(sc, str(tmp_path / "crash"), 70, backend=backend)
+    resumed = resume_run(str(tmp_path / "crash"))
+    assert resumed.resumed_from_tick == 70
+    assert _report_bytes(resumed.report) == _report_bytes(base.report)
+
+
+@pytest.mark.parametrize("engine", ["numpy", "xla"])
+def test_crash_resume_across_engines(tmp_path, engine):
+    sc = _tiny(engine=engine)
+    base = run_durable(sc, str(tmp_path / "base"))
+    _crash_run(sc, str(tmp_path / "crash"), 45)
+    resumed = resume_run(str(tmp_path / "crash"))
+    assert resumed.resumed_from_tick == 40
+    assert _report_bytes(resumed.report) == _report_bytes(base.report)
+
+
+def test_crash_before_first_snapshot_restarts(tmp_path):
+    sc = _tiny()
+    base = run_durable(sc, str(tmp_path / "base"))
+    _crash_run(sc, str(tmp_path / "crash"), 5, snapshot_every_s=1800.0)
+    resumed = resume_run(str(tmp_path / "crash"))
+    assert resumed.resumed_from_tick is None
+    assert _report_bytes(resumed.report) == _report_bytes(base.report)
+
+
+def test_crash_resume_full_control_plane(tmp_path):
+    """The smoke scenario has every subsystem on — faults, flaky agents,
+    autoscaling, a trained predictor with its memo cache, a retained event
+    log — so this exercises the whole snapshot surface."""
+    sc = scenario_by_name("smoke").with_overrides(
+        n_devices=48, predictor_samples=100, predictor_epochs=3)
+    base = run_durable(sc, str(tmp_path / "base"))
+    _crash_run(sc, str(tmp_path / "crash"), 80)
+    resumed = resume_run(str(tmp_path / "crash"))
+    assert resumed.resumed_from_tick == 80
+    assert _report_bytes(resumed.report) == _report_bytes(base.report)
+    # the recovered WAL is gaplessly consistent with the bus digest
+    n = resumed.report["events"]["n_events"]
+    assert (resumed.store.replay_digest(n).hexdigest()
+            == resumed.report["events"]["digest"])
+
+
+def test_crash_resume_with_serving_and_obs(tmp_path):
+    """Serving lanes mid-queue and obs writers mid-stream survive: the
+    resumed metrics/trace/prom artifacts are byte-identical too."""
+    sc = scenario_by_name("serving-slo").with_overrides(
+        n_devices=64, hours=1.0, predictor_samples=100, predictor_epochs=3)
+
+    def run_one(tag, crash=None):
+        d = tmp_path / tag
+        obs = ObsConfig(metrics_out=str(d / "metrics.jsonl"),
+                        trace_out=str(d / "trace.jsonl"),
+                        prom_out=str(d / "metrics.prom"),
+                        metrics_every_s=300.0)
+        os.makedirs(d, exist_ok=True)
+        if crash is None:
+            return run_durable(sc, str(d / "run"), obs=obs).report, d
+        _crash_run(sc, str(d / "run"), crash, obs=obs)
+        return resume_run(str(d / "run")).report, d
+
+    base_rep, base_dir = run_one("base")
+    res_rep, res_dir = run_one("crash", crash=75)
+    assert _report_bytes(res_rep) == _report_bytes(base_rep)
+    for f in ("metrics.jsonl", "trace.jsonl", "metrics.prom"):
+        assert ((res_dir / f).read_bytes() == (base_dir / f).read_bytes()), f
+
+
+def test_double_crash_resume(tmp_path):
+    """A resume that itself dies is resumable again from a later snapshot."""
+    sc = _tiny()
+    base = run_durable(sc, str(tmp_path / "base"))
+    _crash_run(sc, str(tmp_path / "crash"), 35)
+    run = DurableRun.open(str(tmp_path / "crash"))
+    snap_cb = run._tick_callback()
+
+    def cb(ticks_done, t):
+        snap_cb(ticks_done, t)
+        if ticks_done >= 90:
+            raise _Crash
+    picked = run._pick_snapshot()
+    assert picked is not None
+    _path, snap = picked
+    prefixes = run._read_obs_prefixes(snap)
+    run.cp = ControlPlane(sc, obs=run.obs)
+    from repro.durability import restore_control
+    restore_control(run.cp, snap, store=run.store, obs_prefixes=prefixes)
+    run.store.truncate(snap["bus"]["n_events"])
+    run.cp.bus.attach_sink(run.store.append)
+    with pytest.raises(_Crash):
+        run.cp.run(start_tick=snap["tick_i"], start_t=snap["t"],
+                   tick_callback=cb)
+    run.store.close()
+    del run
+    gc.collect()
+    resumed = resume_run(str(tmp_path / "crash"))
+    assert resumed.resumed_from_tick == 90
+    assert _report_bytes(resumed.report) == _report_bytes(base.report)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestCrashPointProperty:
+    @settings(max_examples=6, deadline=None)
+    @given(crash_after=st.integers(min_value=1, max_value=115),
+           every_s=st.sampled_from([150.0, 300.0, 750.0]))
+    def test_any_crash_tick_recovers_identically(self, tmp_path_factory,
+                                                 crash_after, every_s):
+        sc = _tiny()
+        tmp = tmp_path_factory.mktemp("crashprop")
+        base = run_durable(sc, str(tmp / "base"))
+        _crash_run(sc, str(tmp / "crash"), crash_after,
+                   snapshot_every_s=every_s)
+        resumed = resume_run(str(tmp / "crash"))
+        assert _report_bytes(resumed.report) == _report_bytes(base.report)
