@@ -1,14 +1,19 @@
 """Observability overhead: obs-off vs obs-on wall time for diurnal-mixed.
 
 The acceptance budget for the observability plane is ≤5% added wall time on
-the flagship campaign's run phase (metrics + trace streaming enabled, full
-window rollups and span folding).  This suite measures it: the same
-``diurnal-mixed`` scenario runs with observability off and on (one shared,
-pre-built predictor; a warm-up run first so one-time jit compiles don't land
-in either measurement), and a third run profiles the tick-phase breakdown
+the flagship campaign's run phase (metrics + trace streaming + window
+alerting enabled, full window rollups and span folding).  This suite
+measures it: the same ``diurnal-mixed`` scenario runs with observability
+off and on (one shared, pre-built predictor; a warm-up run first so
+one-time jit compiles don't land in either measurement), and a third run
+profiles the tick-phase breakdown
 (inputs/predict/match/dense_core/account/serving) — the *only* place those
 wall-clock phase numbers are allowed to appear (they are quarantined from
 every deterministic artifact).
+
+CI gates the smoke-shape ratio at ≤1.25x (soft: tiny shapes carry fixed
+per-run costs the flagship amortizes away; the 1.05 budget is judged on
+the full shape).
 
   PYTHONPATH=src python benchmarks/obs_overhead.py          # full 20k x 12h
   PYTHONPATH=src python benchmarks/obs_overhead.py --smoke  # tiny CI shape
@@ -28,8 +33,9 @@ def _scenario(smoke: bool):
     if smoke:
         # big enough that per-tick work dominates per-run fixed costs —
         # a 64-device half-hour run finishes in ~30ms and the off/on ratio
-        # is pure timer noise
-        return sc.with_overrides(n_devices=512, hours=3.0, seed=0,
+        # is pure timer noise; 6h keeps walls ~0.5s so the CI ratio gate
+        # isn't dominated by shared-runner jitter
+        return sc.with_overrides(n_devices=512, hours=6.0, seed=0,
                                  predictor_samples=150, predictor_epochs=5)
     return sc.with_overrides(n_devices=20000, hours=12.0, seed=0)
 
@@ -66,7 +72,8 @@ def run_json(smoke: bool = False, pairs: int = 2) -> dict:
     t_pred = time.perf_counter() - t0
     with tempfile.TemporaryDirectory(prefix="obs_overhead_") as tmp:
         obs = ObsConfig(metrics_out=os.path.join(tmp, "metrics.jsonl"),
-                        trace_out=os.path.join(tmp, "trace.jsonl"))
+                        trace_out=os.path.join(tmp, "trace.jsonl"),
+                        alerts_out=os.path.join(tmp, "incidents.jsonl"))
         _run_cell(sc, predictor)                      # warm-up (jit, caches)
         # single paired runs are noisy at flagship scale (shared-host VM
         # jitter moves walls by ~10%); alternate off/on pairs and take the
@@ -79,6 +86,7 @@ def run_json(smoke: bool = False, pairs: int = 2) -> dict:
             on_walls.append(w)
         off_wall, on_wall = min(off_walls), min(on_walls)
         obs_summary = cp_on.obs.summary()
+        alerts_summary = cp_on.obs.incidents_summary()
         prof = PhaseProfiler()
         _run_cell(sc, predictor, obs=obs, profiler=prof)
     base = {"scenario": sc.name, "n_devices": sc.n_devices,
@@ -90,7 +98,9 @@ def run_json(smoke: bool = False, pairs: int = 2) -> dict:
             {**base, "obs": True, "wall_s": on_wall,
              "metrics_rows": obs_summary["metrics"]["rows"],
              "metrics_windows": obs_summary["metrics"]["windows"],
-             "trace_rows": obs_summary["trace"]["rows"]},
+             "trace_rows": obs_summary["trace"]["rows"],
+             "alert_rows": alerts_summary["rows"],
+             "incidents": alerts_summary["total"]},
         ],
         "overhead": {
             "off_wall_s": off_wall,
@@ -111,10 +121,36 @@ def run_json(smoke: bool = False, pairs: int = 2) -> dict:
     }
 
 
+def gate(threshold: float = 1.25, attempts: int = 3, pairs: int = 4) -> int:
+    """The soft CI gate: pass if ANY attempt's min-paired ratio is within
+    ``threshold``.  Shared runners jitter walls by 2x in the worst case and
+    that jitter overwhelmingly *inflates* a single measured ratio, so
+    best-of-attempts rejects noise while a genuine hot-path regression
+    (true ratio above threshold) fails every attempt."""
+    best = float("inf")
+    for i in range(attempts):
+        ratio = run_json(smoke=True, pairs=pairs)["overhead"]["ratio"]
+        best = min(best, ratio)
+        print(f"gate attempt {i + 1}/{attempts}: ratio {ratio:.3f} "
+              f"(threshold {threshold})")
+        if ratio <= threshold:
+            print(f"obs overhead gate OK (ratio {ratio:.3f} <= {threshold})")
+            return 0
+    print(f"obs overhead gate FAIL: best ratio {best:.3f} > {threshold} "
+          f"across {attempts} attempts")
+    return 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--gate", action="store_true",
+                    help="soft CI gate: fail only if every attempt's "
+                         "obs-on/off ratio exceeds the budget")
+    ap.add_argument("--gate-threshold", type=float, default=1.25)
     args = ap.parse_args(argv)
+    if args.gate:
+        return gate(threshold=args.gate_threshold)
     doc = run_json(smoke=args.smoke)
     ov = doc["overhead"]
     print(f"obs off {ov['off_wall_s']:.2f}s  on {ov['on_wall_s']:.2f}s  "

@@ -24,15 +24,28 @@ Groups:
 * **Observability** — :class:`ObsConfig` (pass as ``run_scenario(obs=...)``),
   :class:`MetricsRegistry` / :class:`PhaseProfiler` for standalone use, and
   the exporter helpers (``canonical_json``, ``prometheus_text``,
-  ``lint_prometheus``).
+  ``lint_prometheus``);
+* **Alerting** — the alert-rule registry (``AlertRule``,
+  ``register_alert_rule`` / ``resolve_alert_rules`` /
+  ``alert_rules_available`` / ``default_alert_rules``), the window-boundary
+  :class:`AlertEngine` with its :class:`Incident` lifecycle, and the
+  ``incidents.jsonl`` readers (``read_incidents``, ``incidents_open_at``);
+* **Forensics** — ``inspect_run`` (time-travel a durable run to a tick and
+  summarize its state) and ``diff_runs`` (pinpoint the first divergent WAL
+  event between two runs via chain bisection).
 """
 from __future__ import annotations
 
 from repro.cluster.control import (REPORT_SCHEMA, check_schema, run_scenario,
                                    run_policy_scenario)
-from repro.obs import (OBS_SCHEMA, MetricsRegistry, ObsConfig, ObsPlane,
-                       PhaseProfiler, canonical_json, lint_prometheus,
-                       prometheus_text)
+from repro.durability import (DIFF_SCHEMA, INSPECT_SCHEMA, diff_runs,
+                              inspect_run)
+from repro.obs import (ALERTS_SCHEMA, OBS_SCHEMA, AlertEngine, AlertRule,
+                       Incident, MetricsRegistry, ObsConfig, ObsPlane,
+                       PhaseProfiler, alert_rules_available, canonical_json,
+                       default_alert_rules, incidents_open_at,
+                       lint_prometheus, prometheus_text, read_incidents,
+                       register_alert_rule, resolve_alert_rules)
 from repro.cluster.scenario import SCENARIOS, Scenario, scenario_by_name
 from repro.core.dynamic_sm import dynamic_sm
 from repro.core.interference import (OFFLINE_MODEL_PROFILES,
@@ -67,4 +80,11 @@ __all__ = [
     "ObsConfig", "ObsPlane", "OBS_SCHEMA",
     "MetricsRegistry", "PhaseProfiler",
     "canonical_json", "prometheus_text", "lint_prometheus",
+    # alerting
+    "ALERTS_SCHEMA", "AlertRule", "AlertEngine", "Incident",
+    "register_alert_rule", "resolve_alert_rules",
+    "alert_rules_available", "default_alert_rules",
+    "read_incidents", "incidents_open_at",
+    # forensics
+    "INSPECT_SCHEMA", "inspect_run", "DIFF_SCHEMA", "diff_runs",
 ]

@@ -29,6 +29,8 @@ commands:
   serve     run a request-level serving scenario (serving-plane focus)
   profile   run a pair-profiling campaign -> speed-matrix artifact
   bench     run the figure/system benchmarks (CSV or JSON artifact)
+  inspect   time-travel a durable run to a tick and summarize its state
+  diff      pinpoint the first divergent WAL event between two runs
 
 `python -m repro <command> --help` shows each command's flags.
 """
@@ -77,6 +79,8 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
         for name, sc in sorted(SCENARIOS.items()):
             print(f"{name:16s} {sc.description}")
         return 0
+    if args.list_alert_rules:
+        return _list_alert_rules()
     if args.list_policies:
         for name in available():
             pol = resolve(name)
@@ -122,6 +126,7 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
           f"({wall:.1f}s wall)", file=sys.stderr)
     _emit_serving_note(report)
     _emit_obs_note(report)
+    _emit_incidents_note(report)
     return 0
 
 
@@ -166,6 +171,8 @@ def serve_main(argv=None) -> int:
                     help="validate an existing report file and exit")
     args = ap.parse_args(argv)
 
+    if args.list_alert_rules:
+        return _list_alert_rules()
     if args.check_schema:
         return _check_schema_file(args.check_schema, check_schema)
     if args.verify_manifest:
@@ -199,6 +206,7 @@ def serve_main(argv=None) -> int:
     wall = time.perf_counter() - t0
     _emit_serving_note(report)
     _emit_obs_note(report)
+    _emit_incidents_note(report)
     print(f"[{report['scenario']['name']}] ({wall:.1f}s wall)",
           file=sys.stderr)
     return 0
@@ -375,6 +383,88 @@ def _bench_json(path: str, smoke: bool) -> int:
     return failures + len(problems)
 
 
+# ----------------------------------------------------------------- inspect
+def inspect_main(argv=None) -> int:
+    """Time-travel inspection of a durable run: restore the newest snapshot
+    at or before --tick, replay to exactly that tick, and print a
+    deterministic state summary (byte-identical to a from-start replay and
+    across tick engines).  ``--around-incident K`` jumps to the tick where
+    incident K opened instead.
+    """
+    from repro.durability import dump_inspection, inspect_run
+    from repro.durability.inspect import _fmt_table
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro inspect", description=inspect_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("rundir", help="durable run directory (--durable output)")
+    ap.add_argument("--tick", type=int, default=None,
+                    help="tick to pause at (completed ticks)")
+    ap.add_argument("--around-incident", type=int, default=None,
+                    metavar="ID",
+                    help="inspect at the tick incident ID opened")
+    ap.add_argument("--from-start", action="store_true",
+                    help="replay from tick 0 instead of the newest "
+                         "snapshot (same bytes, slower — the CI check)")
+    ap.add_argument("--out", default=None,
+                    help="write the summary JSON here (default: stdout)")
+    args = ap.parse_args(argv)
+    if args.tick is None and args.around_incident is None:
+        ap.error("need --tick or --around-incident")
+    try:
+        doc = inspect_run(args.rundir, args.tick,
+                          around_incident=args.around_incident,
+                          from_start=args.from_start)
+    except (FileNotFoundError, ValueError) as exc:
+        print(f"inspect: {exc}", file=sys.stderr)
+        return 2
+    text = dump_inspection(doc, args.out)
+    if args.out:
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text, end="")
+    print(_fmt_table(doc), file=sys.stderr)
+    return 0
+
+
+# -------------------------------------------------------------------- diff
+def diff_main(argv=None) -> int:
+    """WAL diff between two durable runs: bisect the per-segment sha256
+    chains to the first mismatched segment, then report the exact first
+    divergent event with surrounding context and each run's incident
+    timeline at the divergence tick.  Exit 0 when the event streams are
+    identical, 3 when they diverge.
+    """
+    from repro.durability import diff_runs, format_diff
+    from repro.obs.export import canonical_json
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro diff", description=diff_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("rundir_a", help="baseline durable run directory")
+    ap.add_argument("rundir_b", help="comparison durable run directory")
+    ap.add_argument("--context", type=int, default=3,
+                    help="events of context around the divergence "
+                         "(default: 3)")
+    ap.add_argument("--out", default=None,
+                    help="write the diff JSON here (default: stdout)")
+    args = ap.parse_args(argv)
+    try:
+        doc = diff_runs(args.rundir_a, args.rundir_b, context=args.context)
+    except (FileNotFoundError, ValueError) as exc:
+        print(f"diff: {exc}", file=sys.stderr)
+        return 2
+    text = canonical_json(doc) + "\n"
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text, end="")
+    print(format_diff(doc), file=sys.stderr)
+    return 0 if doc["identical"] else 3
+
+
 # ----------------------------------------------------------------- helpers
 def _add_obs_flags(ap) -> None:
     g = ap.add_argument_group(
@@ -393,17 +483,41 @@ def _add_obs_flags(ap) -> None:
     g.add_argument("--profile-phases", action="store_true",
                    help="wall-clock engine phase profile to stderr "
                         "(quarantined: never enters artifacts)")
+    g.add_argument("--alerts-out", default=None, metavar="INCIDENTS.jsonl",
+                   help="evaluate the alert-rule catalog at every metrics "
+                        "window boundary and write the alert/incident "
+                        "lifecycle JSONL here")
+    g.add_argument("--alert-rules", default=None, metavar="RULE[,RULE...]",
+                   help="comma-separated rule subset (default: the full "
+                        "catalog; see --list-alert-rules)")
+    g.add_argument("--list-alert-rules", action="store_true",
+                   help="list the registered alert rules and exit")
+
+
+def _list_alert_rules() -> int:
+    from repro.obs import default_alert_rules
+    for r in default_alert_rules():
+        gate = (f"> {r.threshold:g}"
+                + (f" & slow{r.slow_windows}-mean > {r.slow_threshold:g}"
+                   if r.kind == "burn_rate" and r.slow_threshold is not None
+                   else ""))
+        print(f"{r.name:22s} {r.severity:6s} {r.scope:8s} "
+              f"{r.signal} {gate} for={r.for_windows} "
+              f"clear={r.clear_windows}\n{'':22s} {r.description}")
+    return 0
 
 
 def _obs_config(args):
     if not (args.metrics_out or args.trace_out or args.prom_out
-            or args.profile_phases):
+            or args.profile_phases or args.alerts_out):
         return None
     from repro.obs import ObsConfig
+    rules = tuple(r for r in (args.alert_rules or "").split(",") if r)
     return ObsConfig(metrics_out=args.metrics_out,
                      trace_out=args.trace_out, prom_out=args.prom_out,
                      metrics_every_s=args.metrics_every,
-                     profile_phases=args.profile_phases)
+                     profile_phases=args.profile_phases,
+                     alerts_out=args.alerts_out, alert_rules=rules)
 
 
 def _emit_obs_note(report: dict) -> None:
@@ -419,6 +533,16 @@ def _emit_obs_note(report: dict) -> None:
         kinds = ", ".join(f"{k}={v}" for k, v in tr["kinds"].items())
         print(f"[obs] trace: {tr['rows']} rows ({kinds}), "
               f"digest {tr['digest'][:12]}", file=sys.stderr)
+
+
+def _emit_incidents_note(report: dict) -> None:
+    inc = report.get("incidents")
+    if not inc:
+        return
+    print(f"[alerts] {inc['windows']} windows evaluated, "
+          f"{inc['transitions']} transitions, {inc['total']} incidents "
+          f"({inc['open_end']} open at end), digest {inc['digest'][:12]}",
+          file=sys.stderr)
 
 
 def _emit_json(report: dict, out_path) -> None:
@@ -525,6 +649,8 @@ COMMANDS = {
     "serve": serve_main,
     "profile": profile_main,
     "bench": bench_main,
+    "inspect": inspect_main,
+    "diff": diff_main,
 }
 
 

@@ -35,19 +35,20 @@ from repro.core.interference import ONLINE_SERVICE_PROFILES
 from repro.core.simulator import (ClusterSim, SimConfig, SimHooks,
                                   build_sim_config)
 from repro.core.traces import SERVICES, make_trace
-from repro.obs import OBS_SCHEMA, ObsPlane
+from repro.obs import ALERTS_SCHEMA, OBS_SCHEMA, ObsPlane
 from repro.policies import resolve as resolve_policy
 from repro.serving_plane import SERVING_SCHEMA, ServingPlane
 
-# v3: adds the top-level "obs" section (observability plane: emitted-series
-# counts and stream digests; null when no obs outputs were requested) and
-# the events summary's "log_dropped" count.
+# v4: adds the top-level "incidents" section (alert engine: rule catalog,
+# incident lifecycle counts, stream digest; null when alerting is off).
+# v3 added the "obs" section (observability plane: emitted-series counts
+# and stream digests) and the events summary's "log_dropped" count.
 # v2 added the "serving" section (request-level serving plane).
-REPORT_SCHEMA = "repro.cluster.report/v3"
+REPORT_SCHEMA = "repro.cluster.report/v4"
 
 SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
                "autoscaler", "serving", "pools", "scheduler", "events",
-               "obs")
+               "obs", "incidents")
 
 _SERVING_SVC_KEYS = ("arrived", "served", "shed", "p50_ms", "p99_ms",
                      "slo_ms", "slo_attainment")
@@ -89,6 +90,15 @@ def check_schema(report: dict) -> list[str]:
                 for k in ("rows", "digest"):
                     if k not in row:
                         problems.append(f"obs.{section} missing {k!r}")
+    incidents = report.get("incidents")
+    if incidents is not None:
+        if incidents.get("schema") != ALERTS_SCHEMA:
+            problems.append(f"incidents.schema != {ALERTS_SCHEMA!r}: "
+                            f"{incidents.get('schema')!r}")
+        for req in ("rows", "digest", "rules", "windows", "total",
+                    "open_end", "timeline"):
+            if req not in incidents:
+                problems.append(f"missing incidents key {req!r}")
     events = report.get("events")
     if isinstance(events, dict):
         for k in ("log_dropped", "sink_events", "sink_dropped"):
@@ -241,11 +251,16 @@ class ControlPlane:
 
     # ------------------------------------------------------------------ run
     def run(self, *, start_tick: int = 0, start_t: float = 0.0,
-            tick_callback=None):
+            stop_tick: int | None = None, tick_callback=None):
         """Drive the scenario from ``start_tick`` (0 = a fresh run; the
         durability plane resumes from a snapshot's tick boundary with the
         snapshot's recorded ``start_t``); returns the engine's SimResults
         (the JSON report comes from :meth:`report`).
+
+        ``stop_tick`` pauses the loop after that many completed ticks
+        *without* finalizing (time-travel inspection peeks at the exact
+        live state a running campaign had at that tick boundary); the
+        return value is ``None`` for a paused run.
 
         ``tick_callback(ticks_done, t)`` fires after each completed tick —
         the durable runner's snapshot/WAL-flush seam.  It must not touch
@@ -255,6 +270,8 @@ class ControlPlane:
         sim = self.sim
         t = start_t
         n_ticks = int(sc.horizon_seconds() / sc.tick_s)
+        if stop_tick is not None:
+            n_ticks = min(stop_tick, n_ticks)
         for i in range(start_tick, n_ticks):
             self._submit_due(t)
             if self.campaign is not None:
@@ -268,6 +285,8 @@ class ControlPlane:
             if tick_callback is not None:
                 tick_callback(i + 1, t)
         self._t_end = t
+        if stop_tick is not None:
+            return None
         self.results = sim.finalize(t)
         if self.obs is not None:
             self.obs.finalize(t)
@@ -340,6 +359,8 @@ class ControlPlane:
             "events": self.bus.summary(),
             "obs": (self.obs.summary()
                     if self.obs is not None else None),
+            "incidents": (self.obs.incidents_summary()
+                          if self.obs is not None else None),
         }
         return jsonify(rep)
 

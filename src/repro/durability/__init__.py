@@ -27,7 +27,14 @@ Modules:
   writers.
 * :mod:`~repro.durability.manifest` — HMAC-SHA256 signed run manifests.
 * :mod:`~repro.durability.runner` — the durable run loop and ``--resume``.
+* :mod:`~repro.durability.inspect` — time-travel: replay to an arbitrary
+  tick and summarize the live state (``python -m repro inspect``).
+* :mod:`~repro.durability.diff` — pinpoint the first divergent WAL event
+  between two runs via chain bisection (``python -m repro diff``).
 """
+from repro.durability.diff import DIFF_SCHEMA, diff_runs, format_diff
+from repro.durability.inspect import (INSPECT_SCHEMA, build_paused,
+                                      dump_inspection, inspect_run)
 from repro.durability.manifest import (sign_manifest, verify_manifest,
                                        write_manifest)
 from repro.durability.runner import (DurableRun, resume_run, run_durable,
@@ -42,4 +49,6 @@ __all__ = [
     "capture_sim", "restore_sim", "capture_control", "restore_control",
     "sign_manifest", "verify_manifest", "write_manifest",
     "DurableRun", "run_durable", "resume_run", "verify_rundir",
+    "INSPECT_SCHEMA", "inspect_run", "build_paused", "dump_inspection",
+    "DIFF_SCHEMA", "diff_runs", "format_diff",
 ]

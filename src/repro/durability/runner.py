@@ -45,11 +45,12 @@ def _atomic_json(path: str, doc: dict) -> None:
 
 
 def _spill_obs(obs, rundir: str):
-    """A prom-only ObsConfig runs its metrics recorder on a digest-only
-    (fileless) writer — which cannot be re-opened mid-stream on resume.
-    Durable runs therefore spill the metrics JSONL into the run directory;
-    the stream digest (and hence the report) is unchanged."""
-    if obs is not None and obs.prom_out and not obs.metrics_out:
+    """A prom-only (or alerts-only) ObsConfig runs its metrics recorder on
+    a digest-only (fileless) writer — which cannot be re-opened mid-stream
+    on resume.  Durable runs therefore spill the metrics JSONL into the run
+    directory; the stream digest (and hence the report) is unchanged."""
+    if (obs is not None and (obs.prom_out or obs.alerts_out)
+            and not obs.metrics_out):
         return dataclasses.replace(
             obs, metrics_out=os.path.join(rundir, "obs-metrics-spill.jsonl"))
     return obs
@@ -63,6 +64,8 @@ def _obs_from_dict(d: dict | None):
     if d is None:
         return None
     from repro.obs import ObsConfig
+    if d.get("alert_rules") is not None:
+        d = dict(d, alert_rules=tuple(d["alert_rules"]))
     return ObsConfig(**d)
 
 
@@ -244,7 +247,8 @@ class DurableRun:
         if not obs_snap or self.obs is None:
             return prefixes
         for key, path in (("metrics", self.obs.metrics_out),
-                          ("trace", self.obs.trace_out)):
+                          ("trace", self.obs.trace_out),
+                          ("alerts", self.obs.alerts_out)):
             part = obs_snap.get(key)
             if part is None:
                 continue
@@ -297,7 +301,8 @@ class DurableRun:
                 arts.append(self.out)
             if self.obs is not None:
                 arts += [p for p in (self.obs.metrics_out,
-                                     self.obs.trace_out, self.obs.prom_out)
+                                     self.obs.trace_out, self.obs.prom_out,
+                                     self.obs.alerts_out)
                          if p]
         return arts
 

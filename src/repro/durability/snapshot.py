@@ -147,6 +147,9 @@ def _capture_serving(plane) -> list[dict]:
             "hist": np.copy(lane.hist),
             "arrived": lane.arrived, "served": lane.served,
             "shed": lane.shed, "within_slo": lane.within_slo,
+            "win_hist": np.copy(lane.win_hist),
+            "win_arrived": lane.win_arrived, "win_served": lane.win_served,
+            "win_shed": lane.win_shed, "win_within": lane.win_within,
             "lat_sum_ms": lane.lat_sum_ms, "max_ms": lane.max_ms,
             "peak_queue": lane.peak_queue, "cap_sum": lane.cap_sum,
             "ticks": lane.ticks, "batch_seq": lane._batch_seq,
@@ -170,6 +173,11 @@ def _restore_serving(plane, lanes: list[dict]) -> None:
         lane.served = row["served"]
         lane.shed = row["shed"]
         lane.within_slo = row["within_slo"]
+        lane.win_hist = np.copy(row["win_hist"])
+        lane.win_arrived = row["win_arrived"]
+        lane.win_served = row["win_served"]
+        lane.win_shed = row["win_shed"]
+        lane.win_within = row["win_within"]
         lane.lat_sum_ms = row["lat_sum_ms"]
         lane.max_ms = row["max_ms"]
         lane.peak_queue = row["peak_queue"]
@@ -245,16 +253,33 @@ def restore_writer(writer, rows: int, prefix: bytes) -> None:
 
 
 def _capture_obs(obs) -> dict:
-    snap: dict = {"metrics": None, "trace": None}
+    snap: dict = {"metrics": None, "trace": None, "alerts": None}
     if obs.metrics is not None:
         rec = obs.metrics
         snap["metrics"] = {
             "writer": _capture_writer(rec.writer),
             "dev_acc": np.copy(rec._dev_acc),
+            "prev_healthy": np.copy(rec._prev_healthy),
             "tick_i": rec._tick_i, "win_ticks": rec._win_ticks,
             "windows": rec.windows,
             "prev_totals": dict(rec._prev_totals),
             "registry": _capture_registry(rec.registry)}
+    if getattr(obs, "alerts", None) is not None:
+        eng = obs.alerts
+        snap["alerts"] = {
+            "writer": _capture_writer(eng.writer),
+            "windows": eng.windows,
+            "breach_windows": eng.breach_windows,
+            "transitions": eng.transitions,
+            "next_id": eng._next_id,
+            "incidents": [dict(vars(i)) for i in eng.incidents],
+            "states": {key: {"state": st.state, "breaches": st.breaches,
+                             "clears": st.clears, "peak": st.peak,
+                             "ring": list(st.ring),
+                             "incident": (st.incident.id
+                                          if st.incident is not None
+                                          else None)}
+                       for key, st in eng._states.items()}}
     if obs.trace is not None:
         bt = obs._bus_tracer
         snap["trace"] = {
@@ -275,11 +300,35 @@ def _restore_obs(obs, snap: dict, prefixes: dict) -> None:
         restore_writer(rec.writer, m["writer"]["rows"],
                        prefixes.get("metrics", b""))
         rec._dev_acc = np.copy(m["dev_acc"])
+        rec._prev_healthy = np.copy(m["prev_healthy"])
         rec._tick_i = m["tick_i"]
         rec._win_ticks = m["win_ticks"]
         rec.windows = m["windows"]
         rec._prev_totals = dict(m["prev_totals"])
         _restore_registry(rec.registry, m["registry"])
+    if snap.get("alerts") is not None and obs.alerts is not None:
+        from repro.obs.alerts import Incident, _RuleState
+        al = snap["alerts"]
+        eng = obs.alerts
+        restore_writer(eng.writer, al["writer"]["rows"],
+                       prefixes.get("alerts", b""))
+        eng.windows = al["windows"]
+        eng.breach_windows = al["breach_windows"]
+        eng.transitions = al["transitions"]
+        eng._next_id = al["next_id"]
+        eng.incidents = [Incident(**row) for row in al["incidents"]]
+        by_id = {i.id: i for i in eng.incidents}
+        eng._states = {}
+        for key, row in al["states"].items():
+            st = _RuleState()
+            st.state = row["state"]
+            st.breaches = row["breaches"]
+            st.clears = row["clears"]
+            st.peak = row["peak"]
+            st.ring = list(row["ring"])
+            st.incident = (by_id[row["incident"]]
+                           if row["incident"] is not None else None)
+            eng._states[key] = st
     if snap["trace"] is not None:
         tr = snap["trace"]
         restore_writer(obs.trace.writer, tr["writer"]["rows"],

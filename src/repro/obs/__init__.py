@@ -7,8 +7,16 @@ See the submodule docstrings for the contracts; the short version:
   numpy/xla tick engines — sim time only, canonical JSON, sorted keys;
 * emission streams per window/row, so fleet-scale runs stay O(window) in
   memory;
-* wall-clock phase profiling is quarantined to stderr + BENCH_sim.json.
+* wall-clock phase profiling is quarantined to stderr + BENCH_sim.json;
+* alerting (`repro.obs.alerts`) evaluates a deterministic rule catalog at
+  metrics-window boundaries — incidents.jsonl inherits the byte-identity
+  contract.
 """
+from repro.obs.alerts import (ALERT_RULES, ALERTS_SCHEMA, Alert, AlertEngine,
+                              AlertRule, Incident, alert_rules_available,
+                              default_alert_rules, incidents_open_at,
+                              read_incidents, register_alert_rule,
+                              resolve_alert_rules)
 from repro.obs.export import (JsonlWriter, canonical_json, lint_prometheus,
                               prometheus_text)
 from repro.obs.metrics import (METRICS_SCHEMA, FleetMetricsRecorder,
@@ -20,8 +28,12 @@ from repro.obs.trace import (TRACE_SCHEMA, EventBusTracer, RequestTracer,
 
 __all__ = [
     "OBS_SCHEMA", "METRICS_SCHEMA", "TRACE_SCHEMA", "PHASES",
+    "ALERTS_SCHEMA", "ALERT_RULES",
     "ObsConfig", "ObsPlane",
     "MetricsRegistry", "FleetMetricsRecorder",
+    "Alert", "AlertEngine", "AlertRule", "Incident",
+    "alert_rules_available", "default_alert_rules", "resolve_alert_rules",
+    "register_alert_rule", "read_incidents", "incidents_open_at",
     "TraceWriter", "EventBusTracer", "RequestTracer",
     "PhaseProfiler",
     "JsonlWriter", "canonical_json", "prometheus_text", "lint_prometheus",

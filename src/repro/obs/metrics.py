@@ -198,14 +198,21 @@ class FleetMetricsRecorder:
         self.windows = 0
         # per-device window accumulators, one row per rollup key; the pool
         # reduction (bincount) runs once per *window*, not per tick — the
-        # per-tick cost is a handful of in-place vector adds
+        # per-tick cost is a handful of in-place vector adds.  slow_busy
+        # and disable ride the same array, so alerting adds no per-tick
+        # allocation.
         self._keys = ("act", "busy", "sched", "util", "sm", "mem",
-                      "on_sm", "off_share", "qps")
+                      "on_sm", "off_share", "qps", "slow_busy", "disable")
         n = int(sim.cfg.n_devices)
+        self._n_dev = float(n)
+        self._tick_s = float(sim.cfg.tick_s)
         self._dev_acc = np.zeros((len(self._keys), n), np.float64)
         self._tmp = np.empty(n, np.float64)      # per-tick scratch buffer
         self._tmpb = np.empty(n, bool)
+        self._tmpb2 = np.empty(n, bool)
+        self._prev_healthy = np.zeros(n, bool)   # devices start S_INIT
         self._prev_totals: dict[str, float] = {}
+        self.alerts = None                       # optional AlertEngine
         r = self.registry
         pool = ("pool",)
         self.g_devices = r.gauge(
@@ -236,6 +243,12 @@ class FleetMetricsRecorder:
             "share over active devices", pool)
         self.g_qps = r.gauge(
             "fleet_qps", "window-mean offered online QPS", pool)
+        self.g_busy_slow = r.gauge(
+            "fleet_busy_slowdown", "window-mean online slowdown over busy "
+            "shared device-ticks (1.0 when none busy)", pool)
+        self.g_disables = r.gauge(
+            "fleet_device_disables_window", "SysMonitor healthy -> "
+            "non-schedulable transitions this window", pool)
         self.c_started = r.counter(
             "jobs_started_total", "offline job placements")
         self.c_finished = r.counter(
@@ -247,6 +260,20 @@ class FleetMetricsRecorder:
         self.c_incidents = r.counter(
             "online_incidents_total", "errors that propagated to the online "
             "service")
+        # per-window deltas alongside the cumulative counters, so burn-rate
+        # rules (and dashboards) never difference cumulative series
+        self.g_started_w = r.gauge(
+            "jobs_started_window", "offline job placements this window")
+        self.g_finished_w = r.gauge(
+            "jobs_finished_window", "offline jobs completed this window")
+        self.g_evicted_w = r.gauge(
+            "jobs_evicted_window", "offline jobs evicted this window")
+        self.g_errors_w = r.gauge(
+            "errors_injected_window", "injected offline container errors "
+            "this window")
+        self.g_incidents_w = r.gauge(
+            "online_incidents_window", "errors propagated to the online "
+            "service this window")
         self.h_slow = r.histogram(
             "tick_online_slowdown", "per-tick busy-mean online slowdown",
             buckets=SLOWDOWN_BUCKETS)
@@ -266,6 +293,12 @@ class FleetMetricsRecorder:
             self.g_req_queue = r.gauge(
                 "serving_queue_depth", "requests queued at the window "
                 "boundary", svc)
+            self.g_att_w = r.gauge(
+                "serving_window_attainment", "SLO attainment over this "
+                "window's served+shed requests (1.0 when idle)", svc)
+            self.g_p99_w = r.gauge(
+                "serving_window_p99_ms", "p99 latency over this window's "
+                "served requests (4 ms quantized)", svc)
         writer.write({"kind": "header", "schema": METRICS_SCHEMA,
                       "window_s": self.window_s, "tick_s": sim.cfg.tick_s,
                       "pools": self.pools,
@@ -284,6 +317,10 @@ class FleetMetricsRecorder:
         d[1] += busy
         np.equal(core["mstate"], self._healthy, out=tmpb)
         d[2] += tmpb
+        # healthy -> non-schedulable transitions (device-disable spikes)
+        np.greater(self._prev_healthy, tmpb, out=self._tmpb2)
+        d[10] += self._tmpb2
+        np.copyto(self._prev_healthy, tmpb)
         np.multiply(core["tele_util"], act, out=tmp)
         d[3] += tmp
         np.multiply(core["tele_sm"], act, out=tmp)
@@ -296,8 +333,13 @@ class FleetMetricsRecorder:
         np.multiply(inp["used_min"], tmpb, out=tmp)
         d[7] += tmp
         d[8] += inp["qps"]
-        if busy.any():
-            self.h_slow.observe(float(core["slowdown"][busy].mean()))
+        # busy-weighted slowdown through the scratch buffer (no fancy-index
+        # temporary); the same row feeds the online-slowdown alert rule
+        np.multiply(core["slowdown"], busy, out=tmp)
+        d[9] += tmp
+        n_busy = np.count_nonzero(busy)
+        if n_busy:
+            self.h_slow.observe(float(tmp.sum()) / n_busy)
         self._tick_i += 1
         self._win_ticks += 1
         if self._win_ticks >= self.every_ticks:
@@ -310,6 +352,11 @@ class FleetMetricsRecorder:
         acc = {k: np.bincount(po, weights=self._dev_acc[i], minlength=P)
                for i, k in enumerate(self._keys)}
         ticks = self._win_ticks
+        win_h = ticks * self._tick_s / 3600.0
+        # pool/service/fleet signal docs for the alert engine, built from
+        # the same accumulators (and only when alerting is on — the metric
+        # bytes themselves never depend on whether alerts are enabled)
+        pool_sig = {} if self.alerts is not None else None
         for p, name in enumerate(self.pools):
             dev = self._pool_n[p] * ticks
             act = acc["act"][p]
@@ -325,12 +372,32 @@ class FleetMetricsRecorder:
             self.g_on_sm.labels(**lab).set(over_act(acc["on_sm"][p]))
             self.g_off_sm.labels(**lab).set(over_act(acc["off_share"][p]))
             self.g_qps.labels(**lab).set(float(acc["qps"][p] / ticks))
-        sim_totals = self._sim_totals()
-        for fam, total in sim_totals:
+            busy_t = acc["busy"][p]
+            busy_slow = float(acc["slow_busy"][p] / busy_t) if busy_t else 1.0
+            self.g_busy_slow.labels(**lab).set(busy_slow)
+            disables = float(acc["disable"][p])
+            self.g_disables.labels(**lab).set(disables)
+            if pool_sig is not None:
+                pool_h = self._pool_n[p] * win_h
+                pool_sig[name] = {
+                    "busy_slowdown": busy_slow,
+                    "device_disables": disables,
+                    "device_disables_per_1k_hour": (
+                        disables / pool_h * 1e3 if pool_h else 0.0),
+                    "unschedulable_frac": frac(
+                        acc["act"][p] - acc["sched"][p]),
+                }
+        fleet_delta: dict[str, float] = {}
+        for fam, win_gauge, total in self._sim_totals():
             prev = self._prev_totals.get(fam.name, 0.0)
-            fam.inc(total - prev)
+            delta = total - prev
+            fam.inc(delta)
+            win_gauge.set(delta)
             self._prev_totals[fam.name] = total
+            fleet_delta[fam.name] = delta
+        svc_sig = {} if self.alerts is not None else None
         if self.serving is not None:
+            from repro.obs.alerts import ATTAINMENT_OBJECTIVE
             for lane in self.serving.lanes:
                 lab = {"service": lane.service}
                 for fam, total in (
@@ -343,18 +410,53 @@ class FleetMetricsRecorder:
                     self._prev_totals[key] = total
                 self.g_req_queue.labels(**lab).set(
                     float(sum(c[1] for c in lane.queue)))
+                win = lane.window_snapshot()
+                done = win["served"] + win["shed"]
+                attain = win["within_slo"] / done if done else 1.0
+                self.g_att_w.labels(**lab).set(attain)
+                self.g_p99_w.labels(**lab).set(win["p99_ms"])
+                if svc_sig is not None:
+                    svc_sig[lane.service] = {
+                        "attainment": attain,
+                        "burn_rate": ((1.0 - attain)
+                                      / (1.0 - ATTAINMENT_OBJECTIVE)),
+                        "p99_ms": win["p99_ms"],
+                        "p99_slo_ratio": win["p99_ms"] / lane.slo_ms,
+                        "arrived": float(win["arrived"]),
+                        "shed": float(win["shed"]),
+                        "shed_frac": (win["shed"] / win["arrived"]
+                                      if win["arrived"] else 0.0),
+                    }
         self._write_samples(t)
+        if self.alerts is not None:
+            self.alerts.on_window(t, {
+                "t": t, "window_s": ticks * self._tick_s,
+                "fleet": {
+                    "errors": fleet_delta["errors_injected_total"],
+                    "errors_per_device_hour": (
+                        fleet_delta["errors_injected_total"]
+                        / (self._n_dev * win_h) if win_h else 0.0),
+                    "online_incidents": fleet_delta[
+                        "online_incidents_total"],
+                    "evictions": fleet_delta["jobs_evicted_total"],
+                },
+                "pool": pool_sig,
+                "service": svc_sig,
+            })
         self.windows += 1
         self._win_ticks = 0
         self._dev_acc[:] = 0.0
 
     def _sim_totals(self):
         sim = self._sim
-        return ((self.c_started, float(sim.executions)),
-                (self.c_finished, float(len(sim.finished))),
-                (self.c_evicted, float(sim.evictions)),
-                (self.c_errors, float(sim.errors_injected)),
-                (self.c_incidents, float(sim.online_incidents)))
+        return ((self.c_started, self.g_started_w, float(sim.executions)),
+                (self.c_finished, self.g_finished_w,
+                 float(len(sim.finished))),
+                (self.c_evicted, self.g_evicted_w, float(sim.evictions)),
+                (self.c_errors, self.g_errors_w,
+                 float(sim.errors_injected)),
+                (self.c_incidents, self.g_incidents_w,
+                 float(sim.online_incidents)))
 
     def _write_samples(self, t: float) -> None:
         w = self.writer

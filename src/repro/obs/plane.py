@@ -2,7 +2,8 @@
 
 :class:`ObsConfig` is what callers (the CLI's ``--metrics-out`` /
 ``--trace-out`` / ``--prom-out`` / ``--metrics-every`` / ``--profile-phases``
-flags, or ``run_scenario(obs=...)``) hand to the control plane.  It is
+/ ``--alerts-out`` flags, or ``run_scenario(obs=...)``) hand to the control
+plane.  It is
 deliberately **not** a Scenario field: output paths are machine-local and the
 scenario echo in the report must stay byte-identical across machines —
 enabling observability never changes the report outside its own ``obs``
@@ -12,6 +13,8 @@ section (a test pins this neutrality).
 
 * metrics  → :class:`FleetMetricsRecorder` on the sim's obs seam
   (``ClusterSim.attach_obs`` → called at the end of ``_account``);
+* alerts   → :class:`AlertEngine` fed by the recorder at every window
+  boundary (rules over the same accumulators; ``incidents.jsonl``);
 * traces   → :class:`EventBusTracer` subscribed to the bus and a
   :class:`RequestTracer` attached to the serving lanes;
 * phases   → :class:`PhaseProfiler` on the sim's phase seam (wall clock,
@@ -25,6 +28,7 @@ import dataclasses
 import hashlib
 import sys
 
+from repro.obs.alerts import AlertEngine, resolve_alert_rules
 from repro.obs.export import JsonlWriter, prometheus_text
 from repro.obs.metrics import FleetMetricsRecorder
 from repro.obs.phases import PhaseProfiler
@@ -41,11 +45,13 @@ class ObsConfig:
     prom_out: str | None = None         # Prometheus text snapshot
     metrics_every_s: float = 600.0      # rollup window (sim seconds)
     profile_phases: bool = False        # wall-clock tick-phase profile
+    alerts_out: str | None = None       # alert/incident lifecycle JSONL
+    alert_rules: tuple = ()             # rule-name subset ((): full catalog)
 
     @property
     def enabled(self) -> bool:
         return bool(self.metrics_out or self.trace_out or self.prom_out
-                    or self.profile_phases)
+                    or self.profile_phases or self.alerts_out)
 
 
 class ObsPlane:
@@ -58,14 +64,23 @@ class ObsPlane:
         self.phases: PhaseProfiler | None = None
         self._bus_tracer: EventBusTracer | None = None
         self._prom_digest: str | None = None
-        if cfg.metrics_out or cfg.prom_out:
-            # prom-only still runs the recorder (digest-only JSONL sink):
-            # the snapshot needs the registry and the report records what
-            # the JSONL stream would have been
+        self.alerts: AlertEngine | None = None
+        if cfg.metrics_out or cfg.prom_out or cfg.alerts_out:
+            # prom-only / alerts-only still run the recorder (digest-only
+            # JSONL sink): the snapshot needs the registry, alerting needs
+            # the window accumulators, and the report records what the
+            # JSONL stream would have been
             self.metrics = FleetMetricsRecorder(
                 sim, JsonlWriter(cfg.metrics_out),
                 every_s=cfg.metrics_every_s, serving=serving)
             sim.attach_obs(self)
+            if cfg.alerts_out:
+                rules = (resolve_alert_rules(cfg.alert_rules)
+                         if cfg.alert_rules else None)
+                self.alerts = AlertEngine(
+                    JsonlWriter(cfg.alerts_out), rules,
+                    window_s=self.metrics.window_s)
+                self.metrics.alerts = self.alerts
         if cfg.trace_out:
             self.trace = TraceWriter(JsonlWriter(cfg.trace_out))
             self._bus_tracer = EventBusTracer(self.trace)
@@ -87,6 +102,9 @@ class ObsPlane:
         snapshot, close files, print the (quarantined) phase table."""
         if self.metrics is not None:
             self.metrics.finalize(t_end)
+            if self.alerts is not None:
+                self.alerts.finalize(t_end)
+                self.alerts.writer.close()
             if self.cfg.prom_out:
                 text = prometheus_text(self.metrics.registry)
                 with open(self.cfg.prom_out, "w") as f:
@@ -113,3 +131,8 @@ class ObsPlane:
                 "trace": (self.trace.summary()
                           if self.trace is not None else None),
                 "profile_phases": bool(self.phases is not None)}
+
+    def incidents_summary(self) -> dict | None:
+        """The report's top-level ``"incidents"`` section (``None`` when
+        alerting is off — the section key is always present in report/v4)."""
+        return self.alerts.summary() if self.alerts is not None else None

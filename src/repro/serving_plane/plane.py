@@ -43,6 +43,10 @@ SERVING_SCHEMA = "repro.serving/v1"
 _BIN_MS = 0.5                  # latency histogram resolution
 _MAX_MS = 600_000.0            # 10 min clip (overflow lands in the last bin)
 _N_BINS = int(_MAX_MS / _BIN_MS)
+# per-metrics-window histogram: coarser bins keep the reset cheap while a
+# 4 ms-quantized p99 is plenty for burn-rate alerting
+_WIN_BIN_MS = 4.0
+_WIN_BINS = int(_MAX_MS / _WIN_BIN_MS)
 # trace-replay materializes timestamps; refuse silly sizes instead of OOMing
 _MAX_TRACE_REQUESTS = 3_000_000
 
@@ -105,6 +109,10 @@ class _Lane:
         self.hist = np.zeros(_N_BINS, np.int64)
         self.arrived = self.served = self.shed = 0
         self.within_slo = 0
+        # per-metrics-window counters (reset by window_snapshot)
+        self.win_hist = np.zeros(_WIN_BINS, np.int64)
+        self.win_arrived = self.win_served = self.win_shed = 0
+        self.win_within = 0
         self.lat_sum_ms = 0.0
         self.max_ms = 0.0
         self.peak_queue = 0
@@ -123,6 +131,7 @@ class _Lane:
         n_new = self.process.counts_at(t, dt)
         if n_new > 0:
             self.arrived += n_new
+            self.win_arrived += n_new
             work = 1.0
             if self.sigma > 0:
                 work = float(self.size_rng.lognormal(
@@ -152,6 +161,7 @@ class _Lane:
                     if self.tracer is not None and k:
                         self.tracer.shed(self.service, t, c[0], int(k))
                 self.shed += int(sheds.sum())
+                self.win_shed += int(sheds.sum())
                 while self.queue and self.queue[0][1] == 0:
                     self.queue.popleft()
         # continuous batching: FIFO drain of K = C·dt request-work units
@@ -185,11 +195,26 @@ class _Lane:
 
     def _record(self, lat_ms: float, n: int) -> None:
         self.served += n
+        self.win_served += n
         self.lat_sum_ms += lat_ms * n
         self.max_ms = max(self.max_ms, lat_ms)
         if lat_ms <= self.slo_ms:
             self.within_slo += n
+            self.win_within += n
         self.hist[min(int(lat_ms / _BIN_MS), _N_BINS - 1)] += n
+        self.win_hist[min(int(lat_ms / _WIN_BIN_MS), _WIN_BINS - 1)] += n
+
+    def window_snapshot(self) -> dict:
+        """Per-window counters + coarse p99 for the metrics-window rollup
+        and the alert engine's attainment/burn-rate feed; resets the
+        window.  Driven by the metrics recorder at window boundaries."""
+        snap = {"arrived": self.win_arrived, "served": self.win_served,
+                "shed": self.win_shed, "within_slo": self.win_within,
+                "p99_ms": _percentile(self.win_hist, 0.99, _WIN_BIN_MS)}
+        self.win_arrived = self.win_served = self.win_shed = 0
+        self.win_within = 0
+        self.win_hist[:] = 0
+        return snap
 
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:
@@ -214,12 +239,12 @@ class _Lane:
         }
 
 
-def _percentile(hist: np.ndarray, q: float) -> float:
+def _percentile(hist: np.ndarray, q: float, bin_ms: float = _BIN_MS) -> float:
     total = int(hist.sum())
     if total == 0:
         return 0.0
     k = int(np.searchsorted(np.cumsum(hist), np.ceil(q * total)))
-    return (k + 1) * _BIN_MS
+    return (k + 1) * bin_ms
 
 
 class ServingPlane:

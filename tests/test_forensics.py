@@ -1,0 +1,221 @@
+"""Forensics tests: time-travel inspection (snapshot replay vs from-start
+byte-identity, incident targeting) and WAL diffing (chain bisection to the
+exact first divergent event), plus crash-resume byte-identity of the alert
+engine's incidents.jsonl."""
+import gc
+import json
+import os
+
+import pytest
+
+from repro.cluster.control import ControlPlane
+from repro.cluster.scenario import scenario_by_name
+from repro.durability import (DurableRun, build_paused, diff_runs,
+                              dump_inspection, format_diff, inspect_run,
+                              resume_run, run_durable)
+from repro.obs import ObsConfig
+
+
+def _storm(**kw):
+    base = dict(hours=2.5, n_devices=100, seed=0)
+    base.update(kw)
+    return scenario_by_name("fault-storm").with_overrides(**base)
+
+
+def _durable(tmp_path, tag, sc, *, alerts=True, **kw):
+    d = tmp_path / tag
+    os.makedirs(d, exist_ok=True)
+    obs = (ObsConfig(alerts_out=str(d / "incidents.jsonl"),
+                     metrics_every_s=600.0) if alerts else None)
+    run = run_durable(sc, str(d / "run"), obs=obs,
+                      snapshot_every_s=900.0, keep_snapshots=99, **kw)
+    run.finalize_manifest()   # closes the store
+    return str(d / "run")
+
+
+@pytest.fixture(scope="module")
+def storm_rundirs(tmp_path_factory):
+    tmp_path = tmp_path_factory.mktemp("forensics")
+    a = _durable(tmp_path, "a", _storm())
+    a2 = _durable(tmp_path, "a2", _storm())
+    b = _durable(tmp_path, "b", _storm(seed=1))
+    return a, a2, b
+
+
+# ----------------------------------------------------------------- inspect
+def test_inspect_snapshot_vs_from_start_byte_identical(storm_rundirs):
+    rundir, _, _ = storm_rundirs
+    doc_snap = inspect_run(rundir, 180)
+    doc_full = inspect_run(rundir, 180, from_start=True)
+    assert dump_inspection(doc_snap) == dump_inspection(doc_full)
+    # and the snapshot path really did start from a snapshot, not tick 0
+    run = DurableRun.open(rundir)
+    try:
+        _cp, start = build_paused(run, 180)
+        assert start > 0
+    finally:
+        run.store.close()
+
+
+def test_inspect_state_summary_content(storm_rundirs):
+    rundir, _, _ = storm_rundirs
+    doc = inspect_run(rundir, 120)
+    assert doc["tick"] == 120 and doc["t"] == pytest.approx(120 * 30.0)
+    dev = doc["devices"]
+    assert dev["total"] == 100
+    assert 0 <= dev["busy"] <= dev["total"]
+    assert sum(doc["mstate"].values()) == dev["total"]
+    assert doc["jobs"]["running"] == dev["busy"]
+    assert doc["events"]["n_events"] > 0
+    assert sum(doc["placements"]["by_pool"].values()) == dev["busy"]
+    assert doc["incidents"] is not None  # the run recorded alerts
+
+
+def test_inspect_around_incident_targets_open_tick(storm_rundirs):
+    rundir, _, _ = storm_rundirs
+    from repro.obs import read_incidents
+    timeline = read_incidents(os.path.join(
+        os.path.dirname(rundir), "incidents.jsonl"))
+    assert timeline, "fault-storm should open incidents"
+    inc = timeline[0]
+    doc = inspect_run(rundir, around_incident=inc.id)
+    assert doc["t"] == pytest.approx(inc.opened_t)
+    open_ids = [r["id"] for r in doc["incidents"]["open_at_t"]]
+    assert inc.id in open_ids
+
+
+def test_inspect_rejects_bad_targets(storm_rundirs):
+    rundir, _, _ = storm_rundirs
+    with pytest.raises(ValueError, match="horizon"):
+        inspect_run(rundir, 10_000_000)
+    with pytest.raises(ValueError, match="no incident id"):
+        inspect_run(rundir, around_incident=999)
+    with pytest.raises(ValueError, match="tick or an incident"):
+        inspect_run(rundir)
+
+
+def test_inspect_without_alerts_has_null_incidents(tmp_path):
+    rundir = _durable(tmp_path, "noal", _storm(hours=1.0), alerts=False)
+    doc = inspect_run(rundir, 60)
+    assert doc["incidents"] is None
+    with pytest.raises(ValueError, match="recorded none"):
+        inspect_run(rundir, around_incident=0)
+
+
+def test_inspect_is_read_only(storm_rundirs):
+    rundir, _, _ = storm_rundirs
+    inc_path = os.path.join(os.path.dirname(rundir), "incidents.jsonl")
+    before = open(inc_path, "rb").read()
+    events_dir = os.path.join(rundir, "events")
+    seg_bytes = {f: os.path.getsize(os.path.join(events_dir, f))
+                 for f in os.listdir(events_dir)}
+    inspect_run(rundir, 150)
+    assert open(inc_path, "rb").read() == before
+    assert {f: os.path.getsize(os.path.join(events_dir, f))
+            for f in os.listdir(events_dir)} == seg_bytes
+
+
+# -------------------------------------------------------------------- diff
+def test_diff_identical_runs(storm_rundirs):
+    a, a2, _ = storm_rundirs
+    doc = diff_runs(a, a2)
+    assert doc["identical"] is True
+    assert doc["first_divergence"] is None
+    assert doc["sealed_segments_compared"] >= 0
+    assert "identical" in format_diff(doc)
+
+
+def test_diff_pinpoints_first_divergent_event(storm_rundirs):
+    a, _, b = storm_rundirs
+    doc = diff_runs(a, b, context=2)
+    assert doc["identical"] is False
+    fd = doc["first_divergence"]
+    # independently locate the first key mismatch by a full linear scan
+    from repro.durability.store import open_store
+    sa = open_store(os.path.join(a, "events"), "jsonl")
+    sb = open_store(os.path.join(b, "events"), "jsonl")
+    try:
+        expect = next(i for i, (ea, eb) in enumerate(
+            zip(sa.read(0, None), sb.read(0, None)))
+            if ea.key() != eb.key())
+    finally:
+        sa.close()
+        sb.close()
+    assert fd["seq"] == expect
+    assert fd["event_a"] != fd["event_b"]
+    assert fd["event_a"]["seq"] == expect
+    assert len(fd["context_a"]) <= 5 and fd["context_a"][-1]["seq"] >= expect
+    assert doc["incidents_at_divergence"] is not None
+    assert "first divergence" in format_diff(doc)
+
+
+def test_diff_rejects_non_rundir(tmp_path, storm_rundirs):
+    with pytest.raises(FileNotFoundError):
+        diff_runs(str(tmp_path), storm_rundirs[0])
+
+
+# ---------------------------------------------------------- crash + resume
+class _Crash(Exception):
+    pass
+
+
+def test_crash_resume_restores_alert_engine_byte_identical(tmp_path):
+    """Kill a durable run while an incident is open; the resumed run's
+    incidents.jsonl (mid-stream alert writer + rule-state machines +
+    incident list restored from the snapshot) is byte-identical to an
+    uninterrupted run's."""
+    sc = _storm(hours=2.5)
+
+    def obs_for(d):
+        return ObsConfig(alerts_out=str(d / "incidents.jsonl"),
+                         metrics_out=str(d / "metrics.jsonl"),
+                         metrics_every_s=600.0)
+
+    base = tmp_path / "base"
+    os.makedirs(base)
+    run = run_durable(sc, str(base / "run"), obs=obs_for(base),
+                      snapshot_every_s=900.0)
+    run.finalize_manifest()
+
+    crash = tmp_path / "crash"
+    os.makedirs(crash)
+    run = DurableRun.create(sc, str(crash / "run"), obs=obs_for(crash),
+                            snapshot_every_s=900.0)
+    snap_cb = run._tick_callback()
+
+    def cb(ticks_done, t):
+        snap_cb(ticks_done, t)
+        if ticks_done >= 220:   # t=6600s: online-slowdown already firing
+            raise _Crash
+    run.store.truncate(0)
+    run.cp = ControlPlane(sc, obs=run.obs)
+    run.cp.bus.attach_sink(run.store.append)
+    with pytest.raises(_Crash):
+        run.cp.run(tick_callback=cb)
+    run.store.close()
+    del run
+    gc.collect()
+
+    resumed = resume_run(str(crash / "run"))
+    assert resumed.resumed_from_tick is not None
+    resumed.store.close()
+    for f in ("incidents.jsonl", "metrics.jsonl"):
+        assert ((crash / f).read_bytes() == (base / f).read_bytes()), f
+    rep_inc = resumed.report["incidents"]
+    assert rep_inc is not None and rep_inc["total"] >= 1
+
+
+def test_incident_stream_structure(storm_rundirs):
+    """One open row per incident id, resolves pair with opens, and the
+    summary rows land in id order after the transitions."""
+    rundir, _, _ = storm_rundirs
+    rows = [json.loads(line) for line in open(
+        os.path.join(os.path.dirname(rundir), "incidents.jsonl"))]
+    opens = [r["id"] for r in rows if r.get("kind") == "incident_open"]
+    resolves = [r["id"] for r in rows if r.get("kind") == "incident_resolve"]
+    assert len(set(opens)) == len(opens)
+    assert set(resolves) <= set(opens)
+    summaries = [r for r in rows if r.get("kind") == "incident"]
+    assert [r["id"] for r in summaries] == sorted(opens)
+    assert rows[0]["kind"] == "header" and rows[-1]["kind"] == "footer"
+    assert rows[-1]["incidents"] == len(summaries)

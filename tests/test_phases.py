@@ -1,0 +1,101 @@
+"""PhaseProfiler unit tests with a deterministic fake clock: accumulation,
+the nested-phase exclusion arithmetic, summary shape, and the stderr
+table.  (The quarantine of these wall-clock numbers from deterministic
+artifacts is covered in test_obs.py.)"""
+from repro.obs import PhaseProfiler
+from repro.obs.phases import PHASES
+
+
+class _Clock:
+    """A clock advancing 1.0 per call: every timed block 'lasts' exactly
+    the number of clock reads inside it, so assertions are exact."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        self.now += 1.0
+        return self.now
+
+
+def test_add_and_total_accumulate():
+    p = PhaseProfiler(clock=_Clock())
+    p.add("match", 0.25)
+    p.add("match", 0.5)
+    p.add("inputs", 1.0)
+    assert p.total("match") == 0.75
+    assert p.calls == {"match": 2, "inputs": 1}
+    assert p.total("never-timed") == 0.0
+
+
+def test_phase_context_times_the_block():
+    p = PhaseProfiler(clock=_Clock())
+    with p.phase("dense_core"):
+        pass  # enter-read then exit-read: dt = 1.0
+    assert p.total("dense_core") == 1.0
+    assert p.calls["dense_core"] == 1
+
+
+def test_nested_exclusion_subtracts_inner_growth():
+    p = PhaseProfiler(clock=_Clock())
+    with p.phase("account", exclude=("serving",)):
+        with p.phase("serving"):
+            pass
+    # outer block spans 4 clock reads (dt=3), inner spans 2 (dt=1);
+    # exclusion leaves account with only its own 2.0
+    assert p.total("serving") == 1.0
+    assert p.total("account") == 2.0
+
+
+def test_exclusion_only_counts_growth_inside_the_block():
+    p = PhaseProfiler(clock=_Clock())
+    with p.phase("serving"):
+        pass
+    before = p.total("serving")
+    with p.phase("account", exclude=("serving",)):
+        pass  # no serving activity inside: nothing subtracted
+    assert p.total("serving") == before
+    assert p.total("account") == 1.0
+
+
+def test_phase_records_even_when_block_raises():
+    p = PhaseProfiler(clock=_Clock())
+    try:
+        with p.phase("match"):
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert p.calls["match"] == 1 and p.total("match") == 1.0
+
+
+def test_summary_shape_and_rounding():
+    p = PhaseProfiler(clock=_Clock())
+    p.add("inputs", 0.1234567891)
+    p.add("match", 2.0)
+    s = p.summary()
+    assert set(s) == {"phases", "total_s"}
+    assert s["phases"]["inputs"] == {"wall_s": 0.123457, "calls": 1}
+    assert s["phases"]["match"] == {"wall_s": 2.0, "calls": 1}
+    assert s["total_s"] == round(0.1234567891 + 2.0, 6)
+    assert list(s["phases"]) == sorted(s["phases"])
+
+
+def test_format_table_orders_known_phases_then_extras():
+    p = PhaseProfiler(clock=_Clock())
+    p.add("serving", 1.0)
+    p.add("inputs", 1.0)
+    p.add("zz_custom", 1.0)
+    p.add("aa_custom", 1.0)
+    lines = p.format_table().splitlines()
+    names = [ln.split()[1] for ln in lines[1:-1]]
+    # canonical pipeline order first, unknown phases sorted after
+    assert names == ["inputs", "serving", "aa_custom", "zz_custom"]
+    assert all(ln.startswith("[phases]") for ln in lines)
+    assert lines[-1].split()[1] == "total"
+    assert PHASES[0] == "inputs"  # the order the table leans on
+
+
+def test_format_table_empty_profiler_degrades_gracefully():
+    p = PhaseProfiler(clock=_Clock())
+    out = p.format_table()
+    assert "total" in out  # header + total line, no division by zero
