@@ -31,6 +31,7 @@ commands:
   bench     run the figure/system benchmarks (CSV or JSON artifact)
   inspect   time-travel a durable run to a tick and summarize its state
   diff      pinpoint the first divergent WAL event between two runs
+  chaos     run a chaos campaign and verify the survivability invariants
 
 `python -m repro <command> --help` shows each command's flags.
 """
@@ -98,6 +99,8 @@ def sim_main(argv=None, *, prog="python -m repro sim") -> int:
     t0 = time.perf_counter()
     if args.resume:
         report = _durable_resume(args.resume)
+        if report is None:
+            return 2
     else:
         sc = scenario_by_name(args.scenario)
         if args.durable:
@@ -181,6 +184,8 @@ def serve_main(argv=None) -> int:
     t0 = time.perf_counter()
     if args.resume:
         report = _durable_resume(args.resume)
+        if report is None:
+            return 2
     else:
         sc = scenario_by_name(args.scenario)
         serving = sc.serving if sc.serving is not None else ServingConfig()
@@ -465,6 +470,74 @@ def diff_main(argv=None) -> int:
     return 0 if doc["identical"] else 3
 
 
+# ------------------------------------------------------------------- chaos
+def chaos_main(argv=None) -> int:
+    """Chaos verification: run a chaos-enabled scenario (baseline, durable
+    chaos run, and a simulated SIGKILL + resume), then assert the
+    survivability invariants — zero WAL event loss, every injected fault
+    paired with a typed recovery, bounded-retry accounting, recovery
+    byte-identity, snapshot skip-to-next-good, and SLO attainment within
+    --slo-budget of the no-chaos baseline.  Prints the verdict JSON and
+    exits nonzero when any invariant fails.
+    """
+    import tempfile
+
+    from repro.chaos.harness import run_chaos_verification
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro chaos", description=chaos_main.__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--scenario", default="chaos-storm",
+                    help="chaos-enabled scenario (default: chaos-storm)")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--hours", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--engine", default=None, choices=("numpy", "xla"))
+    ap.add_argument("--workdir", default=None,
+                    help="where the durable run directories go (default: "
+                         "a fresh temp directory)")
+    ap.add_argument("--store", default="jsonl", choices=("jsonl", "sqlite"),
+                    help="WAL backend for the durable runs")
+    ap.add_argument("--slo-budget", type=float, default=0.25,
+                    help="max allowed SLO-attainment drop vs the no-chaos "
+                         "baseline (default: 0.25 — the storm's 2.5x "
+                         "overload burst sheds by design, and shed counts "
+                         "as missed)")
+    ap.add_argument("--snapshot-every", type=float, default=900.0,
+                    metavar="SECONDS",
+                    help="snapshot cadence in sim seconds (default: 900)")
+    ap.add_argument("--no-crash", dest="crash", action="store_false",
+                    help="skip the SIGKILL + resume leg (faster)")
+    ap.add_argument("--out", default=None,
+                    help="write the verdict JSON here (default: stdout)")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    workdir = args.workdir or tempfile.mkdtemp(prefix="repro-chaos-")
+    try:
+        doc = run_chaos_verification(
+            args.scenario, workdir=workdir, seed=args.seed,
+            engine=args.engine, devices=args.devices, hours=args.hours,
+            backend=args.store, slo_budget=args.slo_budget,
+            crash=args.crash, snapshot_every_s=args.snapshot_every)
+    except (KeyError, ValueError) as exc:
+        print(f"chaos: {exc}", file=sys.stderr)
+        return 2
+    _emit_json(doc, args.out)
+    for inv in doc["invariants"]:
+        mark = "PASS" if inv["ok"] else "FAIL"
+        print(f"[chaos] {mark} {inv['name']}: {inv['detail']}",
+              file=sys.stderr)
+    wall = time.perf_counter() - t0
+    res = doc["resilience"]
+    print(f"[chaos] {doc['scenario']} seed={doc['seed']} "
+          f"store={doc['backend']}: {res['injected']} faults injected, "
+          f"{res['recovered']} recovered — "
+          + ("all invariants hold" if doc["ok"] else "INVARIANTS VIOLATED")
+          + f" ({wall:.1f}s wall)", file=sys.stderr)
+    return 0 if doc["ok"] else 1
+
+
 # ----------------------------------------------------------------- helpers
 def _add_obs_flags(ap) -> None:
     g = ap.add_argument_group(
@@ -605,9 +678,27 @@ def _durable_run(sc, args) -> dict:
     return run.report
 
 
-def _durable_resume(rundir: str) -> dict:
+def _durable_resume(rundir: str) -> dict | None:
+    """Resume a durable run; a broken run directory prints an actionable
+    message (never a traceback) and returns None — callers exit 2."""
+    import pickle
+
     from repro.durability import resume_run
-    run = resume_run(rundir)
+    try:
+        run = resume_run(rundir)
+    except FileNotFoundError as exc:
+        print(f"resume: {exc}\nresume: pass the directory given to "
+              "--durable (it must contain run.json)", file=sys.stderr)
+        return None
+    except (ValueError, EOFError, pickle.UnpicklingError, OSError) as exc:
+        print(f"resume: {exc}\nresume: the run directory is damaged beyond "
+              "what snapshot fallback can absorb — re-run with --durable "
+              "to start over, or restore the directory from backup",
+              file=sys.stderr)
+        return None
+    for rel, reason in run.snapshot_skips:
+        print(f"[durable] skipped corrupt snapshot {rel}: {reason}",
+              file=sys.stderr)
     _emit_json(run.report, run.out)
     run.finalize_manifest()
     origin = ("tick 0 (no usable snapshot)"
@@ -619,10 +710,18 @@ def _durable_resume(rundir: str) -> dict:
 
 
 def _verify_manifest_file(path: str) -> int:
+    import os
+
     from repro.durability import verify_rundir
+    from repro.durability.manifest import KEY_ENV
     problems = verify_rundir(path)
     for p in problems:
         print(f"MANIFEST: {p}", file=sys.stderr)
+        if "HMAC signature mismatch" in p and not os.environ.get(KEY_ENV):
+            print(f"MANIFEST: note: {KEY_ENV} is not set, so the documented "
+                  "development key was used — if this run was signed with a "
+                  f"production key, export {KEY_ENV} and re-verify",
+                  file=sys.stderr)
     print("manifest " + ("FAIL" if problems else "OK"), file=sys.stderr)
     return 1 if problems else 0
 
@@ -651,6 +750,7 @@ COMMANDS = {
     "bench": bench_main,
     "inspect": inspect_main,
     "diff": diff_main,
+    "chaos": chaos_main,
 }
 
 

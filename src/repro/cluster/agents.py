@@ -33,6 +33,17 @@ class AgentConfig:
     drop_rate: float = 0.0        # P(miss a heartbeat report)
 
 
+def stale_mask(now, last_heartbeat, timeout_s):
+    """THE failure-detection predicate: a node is stale/dead when its last
+    heartbeat is strictly older than ``timeout_s``.
+
+    Shared by :class:`NodeAgentFleet` (vectorized staleness masking) and
+    :class:`repro.runtime.fault_tolerance.HeartbeatMonitor` (per-node
+    training-launch supervision) so the two detectors can never drift.
+    Works element-wise on arrays and on scalars."""
+    return (np.asarray(now) - np.asarray(last_heartbeat)) > timeout_s
+
+
 class NodeAgentFleet:
     """Vectorized per-device agent state: heartbeats, staleness, and the
     last-reported telemetry snapshot."""
@@ -42,6 +53,10 @@ class NodeAgentFleet:
         self.n = n
         self.cfg = cfg
         self.bus = bus
+        # chaos seam: optional FaultInjector (crashed agents miss their
+        # heartbeat; clock skew backdates reported timestamps).  Consults
+        # never touch self.rng, so the no-chaos stream is unperturbed.
+        self.fault_injector = None
         self.rng = np.random.default_rng(seed)
         self.last_report = np.zeros(n, np.float64)    # all report at t=0
         self.stale = np.zeros(n, bool)
@@ -60,14 +75,26 @@ class NodeAgentFleet:
         """One control-plane tick: heartbeat if due, refresh staleness, and
         return the fresh-agent mask (True = agent reporting, schedulable)."""
         cfg = self.cfg
+        inj = self.fault_injector
         if t >= self._next_beat:
             if cfg.drop_rate > 0.0:
                 ok = self.rng.random(self.n) >= cfg.drop_rate
             else:
                 ok = np.ones(self.n, bool)
+            if inj is not None:
+                down = inj.agent_outage(t)
+                if down is not None:
+                    ok = ok & ~down       # crashed agents miss the beat
             self.reports_sent += int(ok.sum())
             self.reports_dropped += int((~ok).sum())
             self.last_report[ok] = t
+            if inj is not None:
+                skew = inj.heartbeat_skew(t)
+                if skew is not None:
+                    # skewed clocks stamp reports in the past; enough skew
+                    # makes a live device look stale until the episode ends
+                    self.last_report[ok] = t - np.broadcast_to(
+                        np.asarray(skew, np.float64), (self.n,))[ok]
             # a successful report carries the device's current telemetry
             share = sim.state.sm_share
             duty = np.where(sim.state.has_job, share, 0.0)
@@ -80,7 +107,8 @@ class NodeAgentFleet:
                     np.copyto(self.seen[key], src, where=ok)
             np.copyto(self.seen_state, sim.monitor.state, where=ok)
             self._next_beat = t + cfg.heartbeat_s
-        now_stale = (t - self.last_report) > cfg.stale_after * cfg.heartbeat_s
+        now_stale = stale_mask(t, self.last_report,
+                               cfg.stale_after * cfg.heartbeat_s)
         went_stale = now_stale & ~self.stale
         recovered = ~now_stale & self.stale
         if self.bus is not None:

@@ -24,6 +24,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.chaos import CHAOS_SCHEMA, ChaosCampaign
 from repro.cluster.agents import NodeAgentFleet
 from repro.cluster.events import EventBus, EventKind
 from repro.cluster.faults import FaultCampaign
@@ -39,16 +40,19 @@ from repro.obs import ALERTS_SCHEMA, OBS_SCHEMA, ObsPlane
 from repro.policies import resolve as resolve_policy
 from repro.serving_plane import SERVING_SCHEMA, ServingPlane
 
-# v4: adds the top-level "incidents" section (alert engine: rule catalog,
+# v5: adds the top-level "resilience" section (chaos plane: injected
+# infrastructure faults, the degradation-ladder engagements that answered
+# them, fault↔recovery pairing; null when no chaos campaign ran).
+# v4 added the "incidents" section (alert engine: rule catalog,
 # incident lifecycle counts, stream digest; null when alerting is off).
 # v3 added the "obs" section (observability plane: emitted-series counts
 # and stream digests) and the events summary's "log_dropped" count.
 # v2 added the "serving" section (request-level serving plane).
-REPORT_SCHEMA = "repro.cluster.report/v4"
+REPORT_SCHEMA = "repro.cluster.report/v5"
 
 SCHEMA_KEYS = ("schema", "scenario", "sim", "jobs", "faults", "agents",
                "autoscaler", "serving", "pools", "scheduler", "events",
-               "obs", "incidents")
+               "obs", "incidents", "resilience")
 
 _SERVING_SVC_KEYS = ("arrived", "served", "shed", "p50_ms", "p99_ms",
                      "slo_ms", "slo_attainment")
@@ -99,6 +103,16 @@ def check_schema(report: dict) -> list[str]:
                     "open_end", "timeline"):
             if req not in incidents:
                 problems.append(f"missing incidents key {req!r}")
+    resilience = report.get("resilience")
+    if resilience is not None:
+        if resilience.get("schema") != CHAOS_SCHEMA:
+            problems.append(f"resilience.schema != {CHAOS_SCHEMA!r}: "
+                            f"{resilience.get('schema')!r}")
+        for req in ("injected", "recovered", "unmatched",
+                    "unmatched_by_kind", "open_end", "injected_by_kind",
+                    "recovered_by_kind", "ladder"):
+            if req not in resilience:
+                problems.append(f"missing resilience key {req!r}")
     events = report.get("events")
     if isinstance(events, dict):
         for k in ("log_dropped", "sink_events", "sink_dropped"):
@@ -237,6 +251,22 @@ class ControlPlane:
             self.serving = ServingPlane.from_sim(
                 self.sim, sc.serving, seed=sc.seed * 52361 + 3)
             self.sim.attach_serving(self.serving)
+        # chaos plane: a fourth decoupled seed stream.  The campaign IS the
+        # FaultInjector every seam consults — agents, serving lanes, the
+        # scheduler round (via sim.chaos), and the durable event store
+        # (wired by the durability runner).  None = every seam skips its
+        # consult and the trajectory is byte-identical to pre-chaos builds.
+        self.chaos = None
+        if sc.chaos is not None:
+            self.chaos = ChaosCampaign(sc.chaos, self.sim,
+                                       seed=sc.seed * 15485863 + 4,
+                                       bus=self.bus)
+            self.chaos.serving = self.serving
+            self.sim.chaos = self.chaos
+            if self.agents is not None:
+                self.agents.fault_injector = self.chaos
+            if self.serving is not None:
+                self.serving.fault_injector = self.chaos
         # observability plane: an ObsConfig, deliberately NOT a Scenario
         # field — output paths are machine-local and the scenario echo in
         # the report must stay byte-identical across machines.  Enabling
@@ -276,6 +306,8 @@ class ControlPlane:
             self._submit_due(t)
             if self.campaign is not None:
                 self.campaign.inject(t, sc.tick_s)
+            if self.chaos is not None:
+                self.chaos.inject(t, sc.tick_s)
             if self.agents is not None:
                 fresh = self.agents.observe(sim, t, self.last_telemetry)
                 sim.set_schedulable_mask(fresh)
@@ -361,6 +393,8 @@ class ControlPlane:
                     if self.obs is not None else None),
             "incidents": (self.obs.incidents_summary()
                           if self.obs is not None else None),
+            "resilience": (self.chaos.summary()
+                           if self.chaos is not None else None),
         }
         return jsonify(rep)
 

@@ -28,6 +28,11 @@ class EventKind(str, enum.Enum):
     AGENT_STALE = "agent_stale"
     AGENT_FRESH = "agent_fresh"
     AUTOSCALE = "autoscale"
+    # chaos plane: an injected infrastructure fault and the typed
+    # degradation/recovery that answered it (data carries ("fault", kind)
+    # and, for RECOVERY, ("action", ladder_rung))
+    CHAOS_INJECT = "chaos_inject"
+    RECOVERY = "recovery"
 
 
 @dataclasses.dataclass(frozen=True)

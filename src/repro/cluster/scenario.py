@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.chaos import ChaosConfig
 from repro.cluster.agents import AgentConfig
 from repro.cluster.faults import FaultCampaignConfig
 from repro.cluster.fleet import GPUPool
@@ -48,6 +49,9 @@ class Scenario:
     predictor_epochs: int = 12
     pools: tuple[GPUPool, ...] = ()         # () -> homogeneous default fleet
     faults: FaultCampaignConfig | None = None
+    # chaos plane: infrastructure fault campaign (None -> the byte-identical
+    # no-chaos path; GPU-side faults stay in `faults` above)
+    chaos: ChaosConfig | None = None
     agents: AgentConfig | None = dataclasses.field(
         default_factory=AgentConfig)
     autoscale: bool = False
@@ -172,6 +176,35 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
         serving=ServingConfig(arrivals="diurnal", load=0.85,
                               request_size_sigma=0.8,
                               admission="deadline")),
+    Scenario(
+        name="chaos-storm",
+        description="Chaos-plane verification campaign: agent crash/clock-"
+                    "skew storms, transient WAL IO fault bursts, predictor "
+                    "outages, matcher budget exhaustion, and serving "
+                    "overload bursts — every fault answered by the "
+                    "graceful-degradation ladder; the harness "
+                    "(python -m repro chaos) asserts zero event loss, "
+                    "byte-identical crash recovery, fault↔recovery "
+                    "pairing, and the online SLO budget.",
+        n_devices=48, hours=2.0, trace="C",
+        pools=_HETERO_POOLS,
+        faults=FaultCampaignConfig(rate_per_device_hour=0.1),
+        agents=AgentConfig(drop_rate=0.02),
+        serving=ServingConfig(arrivals="diurnal", load=0.8,
+                              admission="deadline"),
+        keep_event_log=True,
+        predictor_samples=150, predictor_epochs=5,
+        # every episode (max 900 s) closes well before the 7200 s horizon
+        chaos=ChaosConfig(
+            agent_crash_rate_per_hour=0.6, agent_restart_s=240.0,
+            clock_skew_rate_per_hour=0.3, clock_skew_s=120.0,
+            clock_skew_len_s=600.0,
+            wal_fault_rate_per_hour=40.0, wal_fault_burst=2,
+            predictor_outage_rate_per_hour=2.0, predictor_outage_s=900.0,
+            matcher_budget_rate_per_hour=4.0,
+            serving_burst_rate_per_hour=2.0, serving_burst_s=600.0,
+            serving_burst_mult=2.5, brownout_shed_frac=0.10,
+            end_s=5400.0)),
     Scenario(
         name="mig-partition",
         description="ParvaGPU-style static spatial partitioning under heavy "

@@ -141,6 +141,25 @@ def build_weight_grid_arrays(gpu_types: list[str], on_feats: np.ndarray,
     return values, col_group
 
 
+def static_weight_grid(shares: np.ndarray, jobs: list[OfflineJob],
+                       cfg: SchedulerConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Predictor-free fallback grid — the degradation-ladder rung for a
+    speed-predictor outage.
+
+    Uses the §4.3 static share table alone: an offline partner granted SM
+    share ``s`` is assumed to run at roughly ``1 − 0.6·s`` of solo speed
+    (the calibrated average contention slope), identically for every
+    offline profile.  Placement quality drops to "any job on the least
+    contended device", but scheduling rounds keep running — no predictor
+    call is made.  Same ``(values (n, u), col_group (m,))`` contract as
+    :func:`build_weight_grid_arrays`.
+    """
+    col_group, uniq = job_groups(jobs)
+    u = max(1, len(uniq))
+    col = np.maximum(cfg.min_weight, 1.0 - 0.6 * shares.astype(np.float64))
+    return np.tile(col[:, None], (1, u)), col_group
+
+
 def build_weight_grid(slots: list[OnlineSlot], jobs: list[OfflineJob],
                       predictor: SpeedPredictor, cfg: SchedulerConfig,
                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -41,7 +41,7 @@ from repro.core.interference import (OFFLINE_MODEL_PROFILES,
 from repro.core.matching import IncrementalMatcher
 from repro.core.predictor import CachedSpeedPredictor, SpeedPredictor
 from repro.core.scheduler import (OfflineJob, build_weight_grid_arrays,
-                                  solve_matching)
+                                  solve_matching, static_weight_grid)
 from repro.core.sysmonitor import VectorSysMonitor
 from repro.core.traces import (SERVICES, OfflineJobSpec, OnlineQPS, QPSBank,
                                make_trace)
@@ -361,6 +361,10 @@ class ClusterSim:
         # zero cost when disabled
         self.obs = None
         self.phases = None
+        # optional chaos-plane campaign (repro.chaos.ChaosCampaign, set by
+        # the control plane): _schedule consults it for predictor-outage /
+        # matcher-budget fallbacks; None = the byte-identical no-chaos path
+        self.chaos = None
         # step-loop state (the control plane drives ticks one at a time)
         self._job_i = 0
         self._next_sched = 0.0
@@ -603,20 +607,38 @@ class ClusterSim:
              on["sm_occupancy"][free], on["exec_time_ms"][free] / 1000.0],
             axis=1).astype(np.float32)
         ph = self.phases
-        if ph is None:
-            values, col_group = build_weight_grid_arrays(
+        chaos = self.chaos
+
+        def _grid():
+            # degradation ladder: during a predictor outage the round runs
+            # on the §4.3 static share table — no predictor call at all
+            if chaos is not None and chaos.predictor_down(t):
+                chaos.note_predictor_fallback(t)
+                return static_weight_grid(shares, jobs, sched_cfg)
+            return build_weight_grid_arrays(
                 self._gpu_type_arr[free], on_feats, shares, jobs,
                 self.predictor, sched_cfg)
-            pairs = solve_matching(values, col_group, sched_cfg,
-                                   row_ids=free, matcher=self._matcher)
+
+        def _pairs(values, col_group):
+            # degradation ladder: an exhausted matching time budget falls
+            # back to greedy-FIFO placement (the MuxFlow-M ablation path)
+            if chaos is not None and chaos.matcher_exhausted(t):
+                chaos.note_matcher_fallback(t, free.size, len(jobs))
+                greedy = dataclasses.replace(sched_cfg, use_matching=False)
+                return solve_matching(values, col_group, greedy)
+            return solve_matching(values, col_group, sched_cfg,
+                                  row_ids=free, matcher=self._matcher)
+
+        # _schedule runs in plain Python on both tick engines, so the
+        # chaos consults above are engine-invariant by construction
+        if ph is None:
+            values, col_group = _grid()
+            pairs = _pairs(values, col_group)
         else:
             with ph.phase("predict"):
-                values, col_group = build_weight_grid_arrays(
-                    self._gpu_type_arr[free], on_feats, shares, jobs,
-                    self.predictor, sched_cfg)
+                values, col_group = _grid()
             with ph.phase("match"):
-                pairs = solve_matching(values, col_group, sched_cfg,
-                                       row_ids=free, matcher=self._matcher)
+                pairs = _pairs(values, col_group)
         by_job = {sp.job_id: sp for sp in self.pending}
         assigned: set[int] = set()
         for i, j in pairs:

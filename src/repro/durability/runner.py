@@ -93,6 +93,9 @@ class DurableRun:
         self.out = meta.get("out")
         self.snapshots_taken = 0
         self.resumed_from_tick: int | None = None
+        # resume ladder: (rel_path, reason) for every snapshot that was
+        # skipped as corrupt/unreadable on the way to the next good one
+        self.snapshot_skips: list[tuple[str, str]] = []
 
     # ------------------------------------------------------------ creation
     @classmethod
@@ -164,9 +167,13 @@ class DurableRun:
             raise ValueError(f"{rel} does not match its manifest hash")
 
     def _pick_snapshot(self) -> tuple[str, dict] | None:
-        """Newest snapshot that exists and matches its manifest hash.  A
-        snapshot written after the last manifest refresh (crash inside the
-        snapshot step) is skipped — the previous one is still consistent."""
+        """Newest snapshot that exists, matches its manifest hash, and
+        actually unpickles — **skip-to-next-good**: a snapshot written
+        after the last manifest refresh (crash inside the snapshot step),
+        hash-mismatched, or corrupt-but-hash-consistent (bad bytes made it
+        to disk before signing) is recorded in ``snapshot_skips`` and the
+        search continues with the previous one, which is still a valid
+        resume point (resume just re-runs more ticks)."""
         listed = getattr(self, "_manifest", {}).get("artifacts", {})
         paths = sorted(glob.glob(
             os.path.join(self.rundir, "snapshots", "snap-*.pkl")),
@@ -175,12 +182,21 @@ class DurableRun:
             rel = os.path.relpath(path, self.rundir)
             entry = listed.get(rel)
             if entry is None:
-                continue
+                continue      # newer than the manifest — normal, not logged
             sha, size = file_sha256(path)
             if sha != entry["sha256"] or size != entry["bytes"]:
+                self.snapshot_skips.append((rel, "manifest hash mismatch"))
                 continue
-            with open(path, "rb") as f:
-                return path, pickle.load(f)
+            try:
+                with open(path, "rb") as f:
+                    snap = pickle.load(f)
+            except Exception as exc:    # any unpickling failure mode
+                self.snapshot_skips.append((rel, f"unreadable: {exc}"))
+                continue
+            if not isinstance(snap, dict) or "tick_i" not in snap:
+                self.snapshot_skips.append((rel, "not a snapshot payload"))
+                continue
+            return path, snap
         return None
 
     # ----------------------------------------------------------- run loops
@@ -221,6 +237,7 @@ class DurableRun:
             self.store.truncate(0)
             self.cp = ControlPlane(self.scenario, predictor=predictor,
                                    obs=self.obs)
+            self.store.fault_injector = getattr(self.cp, "chaos", None)
             self.cp.bus.attach_sink(self.store.append)
             self.cp.run(tick_callback=self._tick_callback())
         else:
@@ -229,6 +246,7 @@ class DurableRun:
             prefixes = self._read_obs_prefixes(snap)
             self.cp = ControlPlane(self.scenario, predictor=predictor,
                                    obs=self.obs)
+            self.store.fault_injector = getattr(self.cp, "chaos", None)
             restore_control(self.cp, snap, store=self.store,
                             obs_prefixes=prefixes)
             self.store.truncate(snap["bus"]["n_events"])

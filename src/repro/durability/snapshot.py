@@ -153,6 +153,7 @@ def _capture_serving(plane) -> list[dict]:
             "lat_sum_ms": lane.lat_sum_ms, "max_ms": lane.max_ms,
             "peak_queue": lane.peak_queue, "cap_sum": lane.cap_sum,
             "ticks": lane.ticks, "batch_seq": lane._batch_seq,
+            "brownout_shed": lane.brownout_shed,
             "size_rng": lane.size_rng.bit_generator.state,
             "stream": (lane.process._stream.bit_generator.state
                        if lane.process._stream is not None else None),
@@ -184,6 +185,7 @@ def _restore_serving(plane, lanes: list[dict]) -> None:
         lane.cap_sum = row["cap_sum"]
         lane.ticks = row["ticks"]
         lane._batch_seq = row["batch_seq"]
+        lane.brownout_shed = row.get("brownout_shed", 0)
         lane.size_rng.bit_generator.state = row["size_rng"]
         if row["stream"] is not None:
             lane.process._stream.bit_generator.state = row["stream"]
@@ -361,7 +363,7 @@ def capture_control(cp, t: float, tick_i: int) -> dict:
                           "below_since": s._below_since}
                     for svc, s in cp.scalers.items()},
         "campaign": None, "agents": None, "jobs": None,
-        "serving": None, "obs": None,
+        "serving": None, "obs": None, "chaos": None,
     }
     if cp.campaign is not None:
         c = cp.campaign
@@ -389,6 +391,8 @@ def capture_control(cp, t: float, tick_i: int) -> dict:
                         "violations": list(jm.violations)}
     if cp.serving is not None:
         snap["serving"] = _capture_serving(cp.serving)
+    if getattr(cp, "chaos", None) is not None:
+        snap["chaos"] = cp.chaos.capture()
     if cp.obs is not None:
         snap["obs"] = _capture_obs(cp.obs)
     return snap
@@ -449,5 +453,8 @@ def restore_control(cp, snap: dict, *, store=None,
         cp.job_manager.violations = list(snap["jobs"]["violations"])
     if snap["serving"] is not None and cp.serving is not None:
         _restore_serving(cp.serving, snap["serving"])
+    if (snap.get("chaos") is not None
+            and getattr(cp, "chaos", None) is not None):
+        cp.chaos.restore(snap["chaos"])
     if snap["obs"] is not None and cp.obs is not None:
         _restore_obs(cp.obs, snap["obs"], obs_prefixes or {})

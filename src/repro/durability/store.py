@@ -62,12 +62,61 @@ def _atomic_write(path: str, text: str) -> None:
 
 
 class EventStore:
-    """Append-only, truncatable, digest-reconstructable event log."""
+    """Append-only, truncatable, digest-reconstructable event log.
+
+    Append/flush/fsync run under a **bounded deterministic retry ladder**
+    (:meth:`_io`): a transient IO error is retried immediately — never a
+    sleep, the artifact clock is sim time — up to ``max_io_retries`` times
+    before it propagates.  The optional ``fault_injector`` seam (anything
+    with ``store_fault(op)`` / ``note_io_recovered(op, attempts)``, see
+    :class:`repro.chaos.FaultInjector`) fires *before* the real operation,
+    so an injected fault never leaves a partial write behind and a retried
+    append never duplicates a row.
+    """
+
+    #: chaos seam; None = the byte-identical no-chaos path
+    fault_injector = None
+    #: retries per IO operation before the error propagates
+    max_io_retries = 3
+    #: transient IO faults encountered (injected + real)
+    io_faults = 0
+    #: retry attempts that eventually succeeded
+    io_retries = 0
+
+    def _io(self, op: str, fn, exc=(OSError,)):
+        """Run one IO operation under the bounded retry ladder."""
+        inj = self.fault_injector
+        attempts = 0
+        while True:
+            try:
+                if inj is not None and inj.store_fault(op):
+                    raise OSError(f"injected transient WAL {op} fault")
+                out = fn()
+            except exc:
+                self.io_faults += 1
+                if attempts >= self.max_io_retries:
+                    raise
+                attempts += 1
+                self.io_retries += 1
+                continue
+            if attempts and inj is not None:
+                note = getattr(inj, "note_io_recovered", None)
+                if note is not None:
+                    note(op, attempts)
+            return out
 
     def append(self, ev: Event) -> None:
         raise NotImplementedError
 
     def flush(self) -> None:
+        raise NotImplementedError
+
+    def abandon(self) -> None:
+        """Drop the store handle WITHOUT durably closing — the chaos
+        harness's in-process stand-in for SIGKILL.  JSONL: buffered bytes
+        reach the file (the OS page cache would usually hold them) but
+        nothing is fsynced or sealed; sqlite: the uncommitted suffix is
+        rolled back and lost, the torn-write analog."""
         raise NotImplementedError
 
     def read(self, start: int = 0, stop: int | None = None):
@@ -183,16 +232,17 @@ class JsonlEventStore(EventStore):
     def append(self, ev: Event) -> None:
         if ev.seq != self._n:
             raise ValueError(f"WAL gap: expected seq {self._n}, got {ev.seq}")
-        self._f.write(_dumps(_row_of(ev)) + "\n")
+        line = _dumps(_row_of(ev)) + "\n"
+        self._io("append", lambda: self._f.write(line))
         self._n += 1
         self._open_n += 1
         if self._open_n >= self.segment_events:
             self._seal()
 
     def flush(self, fsync: bool = True) -> None:
-        self._f.flush()
+        self._io("flush", self._f.flush)
         if fsync:
-            os.fsync(self._f.fileno())
+            self._io("fsync", lambda: os.fsync(self._f.fileno()))
 
     def read(self, start: int = 0, stop: int | None = None):
         self._f.flush()
@@ -268,6 +318,10 @@ class JsonlEventStore(EventStore):
         self.flush()
         self._f.close()
 
+    def abandon(self) -> None:
+        self._f.flush()
+        self._f.close()
+
 
 class SqliteEventStore(EventStore):
     """Same API over one sqlite file; the chain covers virtual segments of
@@ -314,17 +368,23 @@ class SqliteEventStore(EventStore):
             (seg, start, self.segment_events, sha, _chain(prev, sha)))
         self._sealed_upto = start + self.segment_events
 
+    _IO_ERRORS = (OSError, sqlite3.OperationalError)
+
     def append(self, ev: Event) -> None:
         if ev.seq != self._n:
             raise ValueError(f"WAL gap: expected seq {self._n}, got {ev.seq}")
-        self._db.execute("INSERT INTO events (seq, row) VALUES (?, ?)",
-                         (ev.seq, _dumps(_row_of(ev))))
+        row = _dumps(_row_of(ev))
+        self._io("append",
+                 lambda: self._db.execute(
+                     "INSERT INTO events (seq, row) VALUES (?, ?)",
+                     (ev.seq, row)),
+                 exc=self._IO_ERRORS)
         self._n += 1
         if self._n - self._sealed_upto >= self.segment_events:
             self._seal_virtual()
 
     def flush(self, fsync: bool = True) -> None:
-        self._db.commit()
+        self._io("fsync", self._db.commit, exc=self._IO_ERRORS)
 
     def read(self, start: int = 0, stop: int | None = None):
         q = "SELECT row FROM events WHERE seq >= ?"
@@ -374,6 +434,10 @@ class SqliteEventStore(EventStore):
 
     def close(self) -> None:
         self._db.commit()
+        self._db.close()
+
+    def abandon(self) -> None:
+        self._db.rollback()
         self._db.close()
 
 

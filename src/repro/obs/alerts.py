@@ -208,6 +208,25 @@ register_alert_rule(AlertRule(
     description="window-mean online slowdown on shared devices above the "
                 "1.2x guarantee for four consecutive windows — transient "
                 "co-location spikes decay faster than this"))
+# Chaos-plane rules: their signals only exist when a ChaosCampaign is wired
+# in (the engine skips missing signals), so quiet runs stay incident-free.
+register_alert_rule(AlertRule(
+    "chaos-unrecovered", signal="chaos_open_faults", scope="fleet",
+    threshold=0.5, severity="page", for_windows=3, clear_windows=1,
+    description="an injected fault has stayed open (no paired recovery "
+                "event) for three consecutive windows — a degradation-"
+                "ladder rung failed to engage"))
+register_alert_rule(AlertRule(
+    "wal-retry-storm", signal="chaos_store_retries", scope="fleet",
+    threshold=8.0, severity="ticket", for_windows=2, clear_windows=2,
+    description="more than eight WAL IO retries per window for two "
+                "consecutive windows — the bounded-retry rung is masking "
+                "a persistent storage fault"))
+register_alert_rule(AlertRule(
+    "chaos-brownout", signal="chaos_brownout_shed", scope="fleet",
+    threshold=0.5, severity="ticket", clear_windows=2,
+    description="the serving brownout rung shed requests this window — "
+                "overload protection engaged at the cost of SLO budget"))
 
 
 # ------------------------------------------------------------------- engine

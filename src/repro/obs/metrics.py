@@ -429,17 +429,21 @@ class FleetMetricsRecorder:
                     }
         self._write_samples(t)
         if self.alerts is not None:
+            fleet_sig = {
+                "errors": fleet_delta["errors_injected_total"],
+                "errors_per_device_hour": (
+                    fleet_delta["errors_injected_total"]
+                    / (self._n_dev * win_h) if win_h else 0.0),
+                "online_incidents": fleet_delta[
+                    "online_incidents_total"],
+                "evictions": fleet_delta["jobs_evicted_total"],
+            }
+            chaos = getattr(self._sim, "chaos", None)
+            if chaos is not None:
+                fleet_sig.update(chaos.window_signals())
             self.alerts.on_window(t, {
                 "t": t, "window_s": ticks * self._tick_s,
-                "fleet": {
-                    "errors": fleet_delta["errors_injected_total"],
-                    "errors_per_device_hour": (
-                        fleet_delta["errors_injected_total"]
-                        / (self._n_dev * win_h) if win_h else 0.0),
-                    "online_incidents": fleet_delta[
-                        "online_incidents_total"],
-                    "evictions": fleet_delta["jobs_evicted_total"],
-                },
+                "fleet": fleet_sig,
                 "pool": pool_sig,
                 "service": svc_sig,
             })

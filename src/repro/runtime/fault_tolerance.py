@@ -6,11 +6,18 @@ offline jobs checkpoint-and-restart (checkpoint/), device health feeds the
 SysMonitor (straggler == Unhealthy: its offline job is evicted off the
 critical path), and membership changes simply rebuild the next scheduling
 round's bipartite graph (core/scheduler.py) — elasticity by rescheduling.
+
+The dead/stale predicate itself is :func:`repro.cluster.agents.stale_mask`
+— one shared implementation, so this per-node detector and the control
+plane's vectorized staleness masking can never disagree about when a node
+counts as failed.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+
+from repro.cluster.agents import stale_mask
 
 
 @dataclasses.dataclass
@@ -50,7 +57,8 @@ class HeartbeatMonitor:
         t = time.monotonic() if now is None else now
         dead, alive = [], []
         for n in self.nodes.values():
-            (dead if t - n.last_heartbeat > self.timeout_s else alive).append(n)
+            (dead if stale_mask(t, n.last_heartbeat, self.timeout_s)
+             else alive).append(n)
         times = sorted(n.step_time_ema for n in alive if n.step_time_ema)
         median = times[len(times) // 2] if times else None
         stragglers = []

@@ -109,6 +109,9 @@ class _Lane:
         self.hist = np.zeros(_N_BINS, np.int64)
         self.arrived = self.served = self.shed = 0
         self.within_slo = 0
+        # chaos ladder: requests dropped by tiered brownout (a subset of
+        # `shed`; surfaced in the report's "resilience" section)
+        self.brownout_shed = 0
         # per-metrics-window counters (reset by window_snapshot)
         self.win_hist = np.zeros(_WIN_BINS, np.int64)
         self.win_arrived = self.win_served = self.win_shed = 0
@@ -124,11 +127,16 @@ class _Lane:
 
     # ------------------------------------------------------------- per-tick
     def step(self, t: float, dt: float, capacity_rps: float,
-             service_ms: float) -> None:
+             service_ms: float, *, demand_mult: float = 1.0,
+             brownout_frac: float = 0.0) -> None:
         self.ticks += 1
         self.cap_sum += capacity_rps
-        # enqueue: sub-tick cohorts at slice midpoints, skewed sizes
+        # enqueue: sub-tick cohorts at slice midpoints, skewed sizes.
+        # A chaos overload burst multiplies demand AFTER the arrival draw,
+        # so the lane's RNG stream is identical with and without chaos.
         n_new = self.process.counts_at(t, dt)
+        if demand_mult != 1.0:
+            n_new = int(round(n_new * demand_mult))
         if n_new > 0:
             self.arrived += n_new
             self.win_arrived += n_new
@@ -144,6 +152,10 @@ class _Lane:
                     self.queue.append([t_arr, n_j, work])
         q_len = sum(c[1] for c in self.queue)
         self.peak_queue = max(self.peak_queue, q_len)
+        # chaos ladder: tiered brownout sheds the oldest queued fraction
+        # before admission/drain burn capacity on doomed work
+        if brownout_frac > 0.0 and q_len:
+            self._brownout(t, q_len, brownout_frac)
         service_s = service_ms / 1e3
         # admission: shed SLO-doomed requests before burning capacity
         if self.queue:
@@ -192,6 +204,25 @@ class _Lane:
             else:
                 self.queue[0][1] = n - n_fit
                 break
+
+    def _brownout(self, t: float, q_len: int, frac: float) -> None:
+        """Shed ``frac`` of the queue oldest-first (tiered brownout)."""
+        target = int(q_len * frac)
+        shed = 0
+        while target > 0 and self.queue:
+            c = self.queue[0]
+            k = min(c[1], target)
+            c[1] -= k
+            target -= k
+            shed += k
+            if self.tracer is not None:
+                self.tracer.shed(self.service, t, c[0], k)
+            if c[1] == 0:
+                self.queue.popleft()
+        if shed:
+            self.shed += shed
+            self.win_shed += shed
+            self.brownout_shed += shed
 
     def _record(self, lat_ms: float, n: int) -> None:
         self.served += n
@@ -255,6 +286,9 @@ class ServingPlane:
         self.cfg = cfg
         self.lanes = lanes
         self.tick_s = tick_s
+        # chaos seam: optional FaultInjector (overload-burst demand
+        # multiplier + tiered brownout shedding); None = no-chaos path
+        self.fault_injector = None
 
     # --------------------------------------------------------- construction
     @classmethod
@@ -344,6 +378,9 @@ class ServingPlane:
         accounting epilogue (:meth:`ClusterSim._account`) with per-tick
         arrays that are bitwise-identical across tick engines."""
         dt = self.tick_s
+        inj = self.fault_injector
+        demand_mult = inj.serving_burst_mult(t) if inj is not None else 1.0
+        brownout = inj.brownout_frac(t) if inj is not None else 0.0
         for lane in self.lanes:
             idx = lane.idx
             up = act[idx] & ~outage[idx]
@@ -355,7 +392,8 @@ class ServingPlane:
             else:
                 capacity = 0.0
                 service_ms = lane.base_latency_ms
-            lane.step(t, dt, capacity, service_ms)
+            lane.step(t, dt, capacity, service_ms,
+                      demand_mult=demand_mult, brownout_frac=brownout)
 
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:

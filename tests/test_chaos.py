@@ -1,0 +1,302 @@
+"""Chaos-plane tests: the no-chaos byte-identity contract, campaign
+determinism and engine parity, fault↔recovery pairing, the
+degradation-ladder seams (node agents, serving lanes, the campaign's
+FaultInjector protocol), snapshot round-trips, the verification harness
+end to end, and the CLI's actionable failure modes (broken --resume,
+--verify-manifest without the signing key)."""
+import dataclasses
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro import cli
+from repro.chaos import (CHAOS_SCHEMA, ChaosCampaign, ChaosConfig,
+                         ScriptedInjector)
+from repro.cluster.agents import AgentConfig, NodeAgentFleet
+from repro.cluster.control import check_schema, run_scenario
+from repro.cluster.scenario import scenario_by_name
+from repro.serving_plane import ArrivalProcess, resolve_admission
+from repro.serving_plane.plane import _Lane
+
+
+def _storm(seed=7, devices=12, hours=1.0, **kw):
+    """chaos-storm shrunk to test size, with the injection window clamped
+    the same way the harness clamps it (every episode closes in time)."""
+    sc = scenario_by_name("chaos-storm").with_overrides(
+        seed=seed, n_devices=devices, hours=hours, **kw)
+    end_s = max(0.0, sc.horizon_seconds() - 1200.0)
+    return dataclasses.replace(
+        sc, chaos=dataclasses.replace(sc.chaos, end_s=end_s))
+
+
+@pytest.fixture(scope="module")
+def storm_report():
+    return run_scenario(_storm())
+
+
+# ------------------------------------------------------- byte-identity
+def test_zero_rate_campaign_keeps_trajectory_byte_identical():
+    """The seams' contract: a wired-in campaign whose every rate is 0.0
+    never perturbs the trajectory — only the scenario echo and the
+    "resilience" section may differ from a chaos=None run."""
+    sc = scenario_by_name("chaos-storm").with_overrides(
+        seed=3, n_devices=8, hours=0.5)
+    plain = run_scenario(dataclasses.replace(sc, chaos=None))
+    zeroed = run_scenario(dataclasses.replace(sc, chaos=ChaosConfig()))
+    assert set(plain) == set(zeroed)
+    for key in plain:
+        if key in ("scenario", "resilience"):
+            continue
+        assert (json.dumps(plain[key], sort_keys=True)
+                == json.dumps(zeroed[key], sort_keys=True)), key
+    assert plain["resilience"] is None
+    assert zeroed["resilience"]["injected"] == 0
+    assert zeroed["resilience"]["open_end"] == 0
+
+
+def test_same_seed_chaos_report_byte_identical(storm_report):
+    again = run_scenario(_storm())
+    assert (json.dumps(again, sort_keys=True)
+            == json.dumps(storm_report, sort_keys=True))
+
+
+def test_engine_parity_under_chaos(storm_report):
+    xla = run_scenario(_storm(engine="xla"))
+    assert (json.dumps(xla, sort_keys=True)
+            == json.dumps(storm_report, sort_keys=True))
+
+
+# ------------------------------------------- pairing + report contract
+def test_every_injected_fault_pairs_with_a_recovery(storm_report):
+    res = storm_report["resilience"]
+    assert res["schema"] == CHAOS_SCHEMA
+    assert res["injected"] > 0
+    assert res["unmatched"] == 0 and res["unmatched_by_kind"] == {}
+    assert res["open_end"] == 0
+    assert res["recovered"] == res["injected"]
+    assert storm_report["schema"].endswith("/v5")
+    assert check_schema(storm_report) == []
+
+
+def test_ladder_counters_consistent_with_fault_counts(storm_report):
+    res = storm_report["resilience"]
+    lad, inj = res["ladder"], res["injected_by_kind"]
+    assert lad["agent_restarts"] == inj.get("agent_crash", 0)
+    assert lad["matcher_fallback_rounds"] == inj.get("matcher_budget", 0)
+    if inj.get("wal_io"):
+        # every consumed IO fault was absorbed by at least one retry
+        assert lad["store_faults"] > 0
+        assert lad["store_retries"] >= lad["store_faults"]
+    if inj.get("predictor_outage"):
+        assert lad["predictor_fallback_rounds"] > 0
+
+
+# --------------------------------------------- campaign protocol units
+class _CampSim:
+    def __init__(self, n):
+        self.cfg = types.SimpleNamespace(n_devices=n)
+
+
+def _campaign(**cfg_kw):
+    return ChaosCampaign(ChaosConfig(**cfg_kw), _CampSim(4), seed=1)
+
+
+def test_quiet_campaign_every_seam_returns_neutral():
+    camp = _campaign()
+    camp.inject(5.0, 5.0)
+    assert camp.agent_outage(5.0) is None
+    assert camp.heartbeat_skew(5.0) is None
+    assert camp.store_fault("append") is False
+    assert camp.predictor_down(5.0) is False
+    assert camp.matcher_exhausted(5.0) is False
+    assert camp.serving_burst_mult(5.0) == 1.0
+    assert camp.brownout_frac(5.0) == 0.0
+    assert camp.summary()["injected"] == 0
+
+
+def test_wal_burst_consumed_then_drained_as_one_pair():
+    camp = _campaign(wal_fault_rate_per_hour=1e9, wal_fault_burst=2)
+    camp.inject(5.0, 5.0)                      # arms the burst (p >> 1)
+    assert camp.store_fault("append") and camp.store_fault("flush")
+    assert not camp.store_fault("append")      # burst exhausted
+    camp.note_io_recovered("append", 2)
+    camp.inject(10.0, 5.0)                     # drains the deferred pair
+    s = camp.summary()
+    assert s["injected_by_kind"]["wal_io"] == 1
+    assert s["recovered_by_kind"]["wal_io"] == 1
+    assert s["ladder"]["store_faults"] == 2
+    assert s["ladder"]["store_retries"] == 2
+
+
+def test_matcher_budget_exhaustion_is_one_shot():
+    camp = _campaign(matcher_budget_rate_per_hour=1e9)
+    camp.inject(5.0, 5.0)
+    assert camp.matcher_exhausted(5.0)
+    camp.note_matcher_fallback(5.0, 3, 7)      # consumed by this round
+    assert not camp.matcher_exhausted(5.0)
+    s = camp.summary()
+    assert s["injected_by_kind"]["matcher_budget"] == 1
+    assert s["recovered_by_kind"]["matcher_budget"] == 1
+    assert s["ladder"]["matcher_fallback_rounds"] == 1
+
+
+def test_brownout_tiers_escalate_over_the_burst():
+    camp = _campaign(serving_burst_rate_per_hour=1e9,
+                     serving_burst_s=300.0, brownout_shed_frac=0.1)
+    camp.inject(5.0, 5.0)                      # burst opens at t=5
+    assert camp.serving_burst_mult(6.0) == pytest.approx(2.5)
+    assert camp.brownout_frac(6.0) == pytest.approx(0.1)     # tier 1
+    assert camp.brownout_frac(290.0) == pytest.approx(0.3)   # tier 3
+    assert camp.brownout_frac(400.0) == 0.0    # burst over
+    assert camp.serving_burst_mult(400.0) == 1.0
+
+
+def test_campaign_capture_restore_resumes_identically():
+    kw = dict(agent_crash_rate_per_hour=50.0, clock_skew_rate_per_hour=50.0,
+              wal_fault_rate_per_hour=50.0, agent_restart_s=30.0,
+              clock_skew_len_s=30.0)
+    camp, twin = _campaign(**kw), _campaign(**kw)
+    for i in range(20):
+        camp.inject(5.0 * (i + 1), 5.0)
+    twin.restore(camp.capture())
+    for i in range(20, 60):
+        camp.inject(5.0 * (i + 1), 5.0)
+        twin.inject(5.0 * (i + 1), 5.0)
+    assert camp.summary() == twin.summary()
+
+
+# --------------------------------------------------- agent-fleet seams
+class _AgentSim:
+    def __init__(self, n):
+        self.state = types.SimpleNamespace(
+            sm_share=np.full(n, 0.5), has_job=np.zeros(n, bool))
+        self.monitor = types.SimpleNamespace(state=np.zeros(n, np.int8))
+
+
+def test_agent_outage_turns_stale_after_timeout():
+    n = 4
+    fleet = NodeAgentFleet(n, AgentConfig(), seed=0)
+    fleet.fault_injector = ScriptedInjector(
+        down_mask=np.array([True, False, False, False]))
+    sim = _AgentSim(n)
+    mask = None
+    for t in (0.0, 30.0, 60.0, 90.0, 120.0):
+        mask = fleet.observe(sim, t, {})
+    # 3 heartbeats (90 s) missed -> the crashed agent's device is masked out
+    assert mask.tolist() == [False, True, True, True]
+    assert fleet.stale_episodes == 1
+    fleet.fault_injector = None                # agent restarts
+    assert fleet.observe(sim, 150.0, {}).all()
+
+
+def test_heartbeat_skew_makes_live_device_look_stale():
+    n = 3
+    fleet = NodeAgentFleet(n, AgentConfig(), seed=0)
+    inj = ScriptedInjector(skew_s=120.0)
+    fleet.fault_injector = inj
+    sim = _AgentSim(n)
+    # reports stamped 120 s in the past: past the 90 s staleness timeout
+    assert not fleet.observe(sim, 0.0, {}).any()
+    inj.skew_s = 0.0                           # skew episode ends
+    mask = fleet.observe(sim, 30.0, {})
+    assert mask.all()
+    # telemetry from the skewed beat still landed (the agent was live)
+    assert fleet.seen["sm_share"][0] == pytest.approx(0.5)
+
+
+# -------------------------------------------------- serving-lane seams
+def _lane(times):
+    return _Lane("svc", np.array([0]), np.array([1.0]),
+                 ArrivalProcess.trace_replay(np.asarray(times, float)),
+                 resolve_admission("none"), slo_ms=1000.0,
+                 base_latency_ms=50.0, qps_capacity=10.0,
+                 size_rng=np.random.default_rng(0), sigma=0.0, sub=1)
+
+
+def test_brownout_sheds_oldest_cohorts_first():
+    lane = _lane(np.concatenate([np.full(4, 0.1), np.full(4, 1.1)]))
+    lane.step(0.0, 1.0, 0.0, 50.0)                      # 4 queued
+    lane.step(1.0, 1.0, 0.0, 50.0, brownout_frac=0.5)   # 8 queued, shed 4
+    assert lane.brownout_shed == 4 and lane.shed == 4
+    assert [c[0] for c in lane.queue] == [1.5]          # oldest cohort gone
+    assert sum(c[1] for c in lane.queue) == 4
+
+
+def test_overload_burst_multiplies_demand_after_the_draw():
+    a, b = _lane(np.full(4, 0.2)), _lane(np.full(4, 0.2))
+    a.step(0.0, 1.0, 0.0, 50.0)
+    b.step(0.0, 1.0, 0.0, 50.0, demand_mult=3.0)
+    assert a.arrived == 4 and b.arrived == 12
+    assert sum(c[1] for c in b.queue) == 12
+
+
+# ------------------------------------------------- harness end to end
+def test_chaos_verification_harness_all_invariants_hold(tmp_path):
+    from repro.chaos.harness import VERIFY_SCHEMA, run_chaos_verification
+    doc = run_chaos_verification(
+        "chaos-storm", workdir=str(tmp_path), seed=7, devices=12,
+        hours=1.0, snapshot_every_s=300.0)
+    assert doc["schema"] == VERIFY_SCHEMA
+    assert doc["ok"], doc["invariants"]
+    names = {i["name"] for i in doc["invariants"]}
+    assert {"faults-injected", "fault-recovery-pairing", "zero-event-loss",
+            "store-retry-ladder", "slo-degradation-budget",
+            "recovery-byte-identity",
+            "snapshot-skip-to-next-good"} <= names
+    assert doc["slo"]["baseline_attainment"] is not None
+
+
+# ------------------------------------------------------- CLI contracts
+def test_cli_chaos_rejects_scenario_without_chaos(tmp_path, capsys):
+    rc = cli.chaos_main(["--scenario", "smoke", "--workdir", str(tmp_path)])
+    assert rc == 2
+    assert "no chaos config" in capsys.readouterr().err
+
+
+def test_cli_resume_missing_rundir_is_actionable(tmp_path, capsys):
+    rc = cli.sim_main(["--resume", str(tmp_path / "nope")])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "run.json" in err and "Traceback" not in err
+
+
+def test_cli_resume_garbled_pickle_is_actionable(tmp_path, capsys):
+    """A scenario.pkl whose bytes were corrupted after signing (manifest
+    re-signed, so the hash check passes but unpickling fails) exits 2
+    with an actionable message, never a traceback."""
+    from repro.durability.manifest import (file_sha256, sign_manifest,
+                                           write_manifest)
+    from repro.durability.runner import DurableRun
+    sc = scenario_by_name("smoke").with_overrides(n_devices=4, hours=0.25)
+    rundir = tmp_path / "run"
+    run = DurableRun.create(sc, str(rundir))
+    run.store.close()
+    (rundir / "scenario.pkl").write_bytes(
+        b"\x80\x05 this is not a scenario pickle")
+    manifest = json.loads((rundir / "manifest.json").read_text())
+    sha, size = file_sha256(str(rundir / "scenario.pkl"))
+    manifest["artifacts"]["scenario.pkl"] = {"sha256": sha, "bytes": size}
+    manifest["signature"] = sign_manifest(manifest)
+    write_manifest(str(rundir / "manifest.json"), manifest)
+    rc = cli.sim_main(["--resume", str(rundir)])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "damaged" in err and "Traceback" not in err
+
+
+def test_cli_verify_manifest_hints_at_unset_key(tmp_path, capsys,
+                                                monkeypatch):
+    from repro.durability.manifest import KEY_ENV
+    from repro.durability.runner import DurableRun
+    monkeypatch.setenv(KEY_ENV, "a-production-signing-key")
+    sc = scenario_by_name("smoke").with_overrides(n_devices=4, hours=0.25)
+    run = DurableRun.create(sc, str(tmp_path / "run"))
+    run.store.close()
+    monkeypatch.delenv(KEY_ENV)
+    rc = cli.sim_main(["--verify-manifest",
+                       str(tmp_path / "run" / "manifest.json")])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert KEY_ENV in err and "not set" in err

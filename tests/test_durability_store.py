@@ -144,6 +144,42 @@ class TestEventStore:
         store.close()
 
 
+class TestRetryLadder:
+    def test_injected_faults_absorbed_without_loss_or_dup(self, tmp_path,
+                                                          backend):
+        from repro.chaos import ScriptedInjector
+        store = open_store(str(tmp_path / "ev"), backend)
+        inj = ScriptedInjector(store_faults=2)
+        store.fault_injector = inj
+        evs = _events(5)
+        for ev in evs:
+            store.append(ev)
+        store.flush()
+        # faults fire before the real op: no lost rows, no duplicates
+        assert store.count() == 5
+        assert list(store.read(0, 5)) == evs
+        assert store.io_faults == 2 and store.io_retries == 2
+        # the injector was told the ladder absorbed every fault
+        assert sum(a for _, a in inj.recovered) == 2
+        store.close()
+
+    def test_burst_beyond_retry_budget_propagates(self, tmp_path, backend):
+        from repro.chaos import ScriptedInjector
+        store = open_store(str(tmp_path / "ev"), backend)
+        store.fault_injector = ScriptedInjector(store_faults=10)
+        with pytest.raises(OSError):
+            store.append(_events(1)[0])
+        # the ladder stopped at its bound, not at fault exhaustion
+        assert store.io_retries == store.max_io_retries
+        assert store.io_faults == store.max_io_retries + 1
+        # the failed append left no partial state: seq 0 is still next
+        store.fault_injector = None
+        store.append(_events(1)[0])
+        store.flush()
+        assert store.count() == 1
+        store.close()
+
+
 class TestTornTail:
     def test_jsonl_torn_tail_dropped_on_reopen(self, tmp_path):
         root = str(tmp_path / "ev")
@@ -162,6 +198,28 @@ class TestTornTail:
         with open(seg) as f:
             rows = [json.loads(line) for line in f]
         assert len(rows) == 6
+        store.close()
+
+    def test_sqlite_uncommitted_suffix_rolled_back(self, tmp_path):
+        """The sqlite analog of a torn jsonl tail: rows appended after the
+        last commit are lost on SIGKILL (``abandon()``), the committed
+        prefix survives intact, and resume re-appends the suffix."""
+        root = str(tmp_path / "ev")
+        store = open_store(root, "sqlite")
+        evs = _events(10)
+        for ev in evs[:6]:
+            store.append(ev)
+        store.flush()                 # commit the prefix
+        for ev in evs[6:]:
+            store.append(ev)
+        store.abandon()               # SIGKILL stand-in: rollback + close
+        store = open_store(root, "sqlite")
+        assert store.count() == 6
+        assert list(store.read(0, 6)) == evs[:6]
+        for ev in evs[6:]:
+            store.append(ev)
+        store.flush()
+        assert list(store.read(0, 10)) == evs
         store.close()
 
 

@@ -3,6 +3,7 @@ import os
 import signal
 
 import numpy as np
+import pytest
 
 from repro.core.errors import (ERROR_MIX, Action, ErrorKind, GracefulExit,
                                MixedErrorHandler, sample_error)
@@ -30,6 +31,37 @@ def test_tail_errors_reset_context():
     h = MixedErrorHandler()
     out = h.handle(ErrorKind.XID31_PAGE_FAULT)
     assert out.action == Action.RESET_CONTEXT and not out.propagated
+
+
+@pytest.mark.parametrize("detector", [True, False])
+@pytest.mark.parametrize("graceful", [True, False])
+@pytest.mark.parametrize("kind", list(ErrorKind))
+def test_action_matrix_complete(kind, graceful, detector):
+    """The full ErrorKind x (graceful, detector) policy matrix: signals go
+    graceful (never propagate) only with the mechanism on; tail errors
+    always reset the context and propagate only without the detector."""
+    h = MixedErrorHandler(graceful_enabled=graceful,
+                          detector_enabled=detector)
+    out = h.handle(kind)
+    if kind in MixedErrorHandler.SIGNAL_KINDS:
+        want = Action.GRACEFUL_EXIT if graceful else Action.RESET_CONTEXT
+        assert out.action == want
+        assert out.propagated == (not graceful)
+    else:
+        assert out.action == Action.RESET_CONTEXT
+        assert out.propagated == (not detector)
+    assert h.handled == [out]
+
+
+def test_propagation_rate_zero_handled_is_zero():
+    assert MixedErrorHandler().propagation_rate() == 0.0
+
+
+def test_propagation_rate_mixed():
+    h = MixedErrorHandler(graceful_enabled=False)
+    h.handle(ErrorKind.SIGINT)              # propagates without graceful
+    h.handle(ErrorKind.XID31_PAGE_FAULT)    # detector absorbs it
+    assert h.propagation_rate() == 0.5
 
 
 def test_sample_error_distribution():

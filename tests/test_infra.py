@@ -73,6 +73,23 @@ def test_heartbeat_failure_and_straggler():
     assert status["dead"] == [0, 1, 2, 3] or status["dead"] == [3]
 
 
+def test_heartbeat_monitor_matches_fleet_stale_mask():
+    """Regression for the unified failure predicate: HeartbeatMonitor.check
+    and the control plane's vectorized stale_mask classify the identical
+    heartbeat history identically (boundary value included)."""
+    from repro.cluster.agents import stale_mask
+    beats = [0.0, 10.0, 30.0, 50.0, 51.0, 100.0]
+    hb = HeartbeatMonitor(len(beats), timeout_s=50.0, now=0.0)
+    for n, t in enumerate(beats):
+        hb.heartbeat(n, now=t)
+    now = 100.0
+    dead = set(hb.check(now=now)["dead"])
+    mask = stale_mask(now, np.asarray(beats), 50.0)
+    assert dead == set(np.flatnonzero(mask).tolist())
+    # t=50 is exactly at the timeout: strictly-older semantics — alive
+    assert 3 not in dead
+
+
 def test_elastic_coordinator_emits_plan():
     hb = HeartbeatMonitor(3, timeout_s=10.0, now=0.0)
     co = ElasticCoordinator(hb, get_ckpt_step=lambda: 42)

@@ -2,7 +2,7 @@
 burn-rate slow-window gating, threshold monotonicity, and the end-to-end
 determinism contract (smoke stays incident-free; fault-storm opens
 incidents; incidents.jsonl is byte-identical across same-seed runs and
-across tick engines; the report/v4 "incidents" section validates)."""
+across tick engines; the report/v5 "incidents" section validates)."""
 import json
 
 import pytest
@@ -189,9 +189,9 @@ def test_incidents_byte_identical_across_engines(tmp_path):
     assert raw_np == raw_xla
 
 
-def test_report_v4_schema_with_and_without_alerts(tmp_path):
+def test_report_v5_schema_with_and_without_alerts(tmp_path):
     report, _ = _run(tmp_path, "v", "smoke", seed=0)
-    assert report["schema"].endswith("/v4")
+    assert report["schema"].endswith("/v5")
     assert report["incidents"]["schema"] == ALERTS_SCHEMA
     assert check_schema(report) == []
     plain = run_scenario(scenario_by_name("smoke"), seed=0)
